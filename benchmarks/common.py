@@ -1,0 +1,28 @@
+"""Timing + CSV helpers shared by the per-figure benchmarks."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+import jax
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row)
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-clock microseconds per call of a jitted fn."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        samples.append(time.perf_counter() - t0)
+    samples.sort()
+    return samples[len(samples) // 2] * 1e6

@@ -1,0 +1,20 @@
+"""Paper Fig 12: single / data-parallel (w,w/o overlap) / 2,8-way model parallel."""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core import distmodel
+
+from .common import emit
+
+
+def run() -> None:
+    bert = get_config("bert-large")
+    profiles = distmodel.figure12(bert)
+    s1 = profiles["S1 (single, B=16)"].total
+    for name, prof in profiles.items():
+        b = prof.breakdown()
+        tot = prof.total
+        emit(f"fig12/{name.split(' ')[0]}", tot * 1e6,
+             f"comm_share={prof.comm_time/tot:.3f};"
+             f"lamb_share={b.get('lamb',0)/tot:.3f};"
+             f"vs_single={tot/s1:.2f}")

@@ -1,0 +1,95 @@
+"""Paper Fig 13: kernel-fusion impact — LayerNorm chain and the optimizer.
+
+Measured CPU wall-clock, *unfused* (each phase a separate jit call — the
+paper's separate-GPU-kernel analogue, paying a dispatch boundary + HBM
+round-trip per phase) vs *fused* (one jit). Memory-traffic ratios come from
+the HLO cost engine on the compiled programs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import characterize
+from repro.optim import adamw as adamw_mod
+from repro.optim import lamb as lamb_mod
+
+from .common import emit, time_fn
+
+
+def _traffic(fn, *args) -> float:
+    text = jax.jit(fn).lower(*args).compile().as_text()
+    return characterize.analyze_text(text, 1).bytes
+
+
+def run() -> None:
+    # ---- LayerNorm(+residual) fusion -----------------------------------------
+    r, d = 4096, 1024
+    x = jax.random.normal(jax.random.key(0), (r, d), jnp.float32)
+    res = jax.random.normal(jax.random.key(1), (r, d), jnp.float32)
+    scale = jnp.ones((d,))
+    bias = jnp.zeros((d,))
+
+    add = jax.jit(lambda a, b: a + b)
+    mean = jax.jit(lambda h: jnp.mean(h, -1, keepdims=True))
+    var = jax.jit(lambda h, mu: jnp.mean((h - mu) ** 2, -1, keepdims=True))
+    norm = jax.jit(lambda h, mu, v: (h - mu) * jax.lax.rsqrt(v + 1e-5))
+    affine = jax.jit(lambda y: y * scale + bias)
+
+    def unfused(a, b):
+        h = add(a, b)
+        mu = mean(h)
+        v = var(h, mu)
+        return affine(norm(h, mu, v))
+
+    from repro.kernels.fused_layernorm import ref as lnref
+    fused = jax.jit(lambda a, b: lnref.fused_residual_layernorm(
+        a, b, scale, bias))
+
+    t_u = time_fn(unfused, x, res)
+    t_f = time_fn(fused, x, res)
+    b_f = _traffic(lambda a, b: lnref.fused_residual_layernorm(
+        a, b, scale, bias), x, res)
+    b_u = 5 * 2 * r * d * 4  # 5 phases x read+write
+    emit("fig13/layernorm_unfused", t_u, f"kernels=5;traffic_gb={b_u/1e9:.3f}")
+    emit("fig13/layernorm_fused", t_f,
+         f"kernels=1;traffic_gb={b_f/1e9:.3f};speedup={t_u/t_f:.2f};"
+         f"traffic_ratio={b_u/max(b_f,1):.1f}")
+
+    # ---- optimizer fusion (paper uses Adam) -----------------------------------
+    import numpy as np
+    nt, sz = 24, 65536  # 24 layer-tensors
+    params = {f"w{i}": jax.random.normal(jax.random.key(i), (sz,))
+              for i in range(nt)}
+    grads = jax.tree.map(lambda p: p * 0.01, params)
+    cfg = adamw_mod.AdamWConfig(zero1=False)
+    state = adamw_mod.init(cfg, params)
+
+    fused_upd = jax.jit(lambda g, s, p: adamw_mod.update(cfg, g, s, p))
+
+    # unfused: each elementwise stage of Adam as its own jit call per tensor
+    m_ = jax.jit(lambda m, g: 0.9 * m + 0.1 * g)
+    v_ = jax.jit(lambda v, g: 0.999 * v + 0.001 * g * g)
+    u_ = jax.jit(lambda m, v: m / (jnp.sqrt(v) + 1e-8))
+    w_ = jax.jit(lambda w, u: w - 1e-3 * (u + 0.01 * w))
+
+    def unfused_upd(g, s, p):
+        out = {}
+        for k in p:
+            mm = m_(s["m"][k], g[k])
+            vv = v_(s["v"][k], g[k])
+            out[k] = w_(p[k], u_(mm, vv))
+        return out
+
+    t_f = time_fn(fused_upd, grads, state, params)
+    t_u = time_fn(unfused_upd, grads, state, params)
+    emit("fig13/adam_unfused", t_u, f"kernels={4*nt}")
+    emit("fig13/adam_fused", t_f,
+         f"kernels=1;speedup={t_u/t_f:.2f}")
+
+    # LAMB fused reference (the paper's actual optimizer), for scale
+    lcfg = lamb_mod.LambConfig(zero1=False, master_weights=False)
+    lstate = lamb_mod.init(lcfg, params)
+    lamb_upd = jax.jit(lambda g, s, p: lamb_mod.update(lcfg, g, s, p))
+    t_l = time_fn(lamb_upd, grads, lstate, params)
+    emit("fig13/lamb_fused", t_l, f"tensors={nt}")

@@ -1,0 +1,25 @@
+"""Paper Table 3 + Fig 7: every BERT GEMM's dims and arithmetic intensity,
+for FWD / BWD-grad-activation / BWD-grad-weight."""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core import analytical
+
+from .common import emit
+
+
+def run() -> None:
+    bert = get_config("bert-large")
+    for phase in ("fwd", "bwd_act", "bwd_w"):
+        for g in analytical.transformer_gemms(bert, 32, 128, phase):
+            if g.layer == "head":
+                continue
+            emit(f"table3/{phase}/{g.name}", 0.0,
+                 f"M={g.m};N={g.n};K={g.k};batch={g.batch};"
+                 f"ops_per_byte={g.intensity(4):.1f}")
+    # Fig 7's claim: FC GEMMs' intensity >> attention B-GEMMs'
+    gs = {g.name: g for g in analytical.transformer_gemms(bert, 32, 128)}
+    fc = gs["fc1"].intensity(4)
+    bg = gs["attn_score"].intensity(4)
+    emit("fig7/intensity_ratio", 0.0,
+         f"fc={fc:.1f};attn_bgemm={bg:.1f};ratio={fc/bg:.1f}")

@@ -1,0 +1,25 @@
+"""Paper Fig 8: arithmetic intensity + bandwidth demands of non-GEMM phases."""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core import analytical
+
+from .common import emit
+
+
+def run() -> None:
+    bert = get_config("bert-large")
+    ops = analytical.nongemm_ops(bert, 32, 128, dtype_bytes=4)
+    max_bw_op = max(ops, key=lambda e: e.total_bytes)
+    for e in ops:
+        emit(f"fig8/{e.name}", 0.0,
+             f"ops_per_byte={e.intensity:.2f};"
+             f"rel_bw={e.total_bytes/max_bw_op.total_bytes:.2f};"
+             f"kernels={e.count}")
+    # Takeaway 8: LAMB stage 1 READS w,g,m,v = 4x model size (writes extra)
+    model_bytes = bert.param_count() * 4
+    lamb_reads = 4 * model_bytes
+    lamb_total = sum(e.total_bytes for e in ops if e.layer == "lamb")
+    emit("fig8/lamb_traffic_vs_model", 0.0,
+         f"read_ratio={lamb_reads/model_bytes:.1f};"
+         f"total_rw_ratio={lamb_total/model_bytes:.1f};paper_claim=4x reads")

@@ -1,0 +1,27 @@
+"""§Roofline deliverable: the (arch x shape) table from the dry-run artifacts."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import emit
+
+DRYRUN = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def run(tag: str = "baseline", mesh: str = "single") -> None:
+    for path in sorted(DRYRUN.glob(f"{tag}__{mesh}__*.json")):
+        rec = json.loads(path.read_text())
+        name = f"roofline/{rec['arch']}x{rec['shape']}"
+        if rec.get("skip"):
+            emit(name, 0.0, "SKIP")
+            continue
+        r = rec["roofline"]
+        m = rec["memory"]
+        emit(name, r["step_s"] * 1e6,
+             f"dominant={r['dominant']};compute_ms={r['compute_s']*1e3:.1f};"
+             f"memory_ms={r['memory_s']*1e3:.1f};"
+             f"collective_ms={r['collective_s']*1e3:.1f};"
+             f"useful={r['useful_ratio']:.2f};"
+             f"fraction={r['peak_fraction']:.3f};"
+             f"peak_gb={m['peak_bytes']/1e9:.1f}")

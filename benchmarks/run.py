@@ -1,0 +1,21 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import traceback
+
+
+def main() -> None:
+    from . import (breakdown, distributed, fusion_gemm, fusion_kernels,
+                   gemm_table, nongemm_ai, roofline_table, sweeps)
+    print("name,us_per_call,derived")
+    for mod in (breakdown, gemm_table, nongemm_ai, sweeps, distributed,
+                fusion_kernels, fusion_gemm, roofline_table):
+        try:
+            mod.run()
+        except Exception:  # noqa: BLE001 — a failing table must not hide others
+            traceback.print_exc()
+            print(f"{mod.__name__},0.0,ERROR")
+
+
+if __name__ == '__main__':
+    main()

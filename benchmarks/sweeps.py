@@ -1,0 +1,31 @@
+"""Paper Fig 9 (mini-batch sweep) + Fig 10 (hidden-dim sweep)."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs import get_config
+from repro.core import analytical
+from repro.core.roofline import MI100_FP32
+
+from .common import emit
+
+
+def run() -> None:
+    bert = get_config("bert-large")
+    for b in (4, 8, 16, 32):
+        times = analytical.phase_times(bert, b, 128, dev=MI100_FP32,
+                                       dtype_bytes=4)
+        tot = sum(times.values())
+        emit(f"fig9/B{b}", tot * 1e6,
+             f"lamb_share={times['lamb']/tot:.3f};"
+             f"fc_share={times['fc']/tot:.3f}")
+    for width in (768, 1024, 2048, 4096):
+        arch = dataclasses.replace(bert, d_model=width, d_ff=4 * width,
+                                   head_dim=width // bert.num_heads)
+        times = analytical.phase_times(arch, 32, 128, dev=MI100_FP32,
+                                       dtype_bytes=4)
+        tot = sum(times.values())
+        gemm = sum(v for k, v in times.items()
+                   if k in ("attn_linear", "attn_bgemm", "fc", "head")) / tot
+        emit(f"fig10/d{width}", tot * 1e6,
+             f"gemm_share={gemm:.3f};lamb_share={times['lamb']/tot:.3f}")

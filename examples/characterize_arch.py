@@ -1,0 +1,36 @@
+"""The paper's methodology as a 20-line user script: characterize any arch.
+
+Prints the Table-3 GEMM inventory, the Fig-8 arithmetic-intensity table and a
+Fig-4-style runtime breakdown for a chosen (arch, batch, seq) on TPU v5e.
+
+    PYTHONPATH=src python examples/characterize_arch.py [arch-id] [batch] [seq]
+"""
+import sys
+
+from repro.configs import get_config
+from repro.core import analytical
+from repro.core.roofline import V5E
+
+arch = get_config(sys.argv[1] if len(sys.argv) > 1 else "bert-large")
+batch = int(sys.argv[2]) if len(sys.argv) > 2 else 32
+seq = int(sys.argv[3]) if len(sys.argv) > 3 else 128
+
+print(f"=== {arch.name}: GEMM inventory (fwd), B={batch} n={seq} ===")
+print(f"{'name':16s} {'layer':12s} {'M':>7s} {'N':>9s} {'K':>7s} {'batch':>7s} "
+      f"{'GFLOPs':>9s} {'ops/byte':>9s}")
+for g in analytical.transformer_gemms(arch, batch, seq, "fwd"):
+    print(f"{g.name:16s} {g.layer:12s} {g.m:7d} {g.n:9d} {g.k:7d} "
+          f"{g.batch:7d} {g.flops/1e9:9.1f} {g.intensity():9.1f}")
+
+print(f"\n=== non-GEMM phases (Fig 8) ===")
+print(f"{'name':26s} {'layer':14s} {'GFLOPs':>9s} {'GB':>8s} {'ops/byte':>9s}")
+for e in analytical.nongemm_ops(arch, batch, seq):
+    print(f"{e.name:26s} {e.layer:14s} {e.total_flops/1e9:9.2f} "
+          f"{e.total_bytes/1e9:8.2f} {e.intensity:9.2f}")
+
+print(f"\n=== runtime breakdown on {V5E.name} (train step) ===")
+times = analytical.phase_times(arch, batch, seq, dev=V5E)
+total = sum(times.values())
+for k, v in sorted(times.items(), key=lambda kv: -kv[1]):
+    print(f"  {k:14s} {v*1e3:9.3f} ms  {100*v/total:5.1f}%")
+print(f"  {'TOTAL':14s} {total*1e3:9.3f} ms")

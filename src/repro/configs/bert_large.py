@@ -1,0 +1,29 @@
+"""bert-large — the paper's own model (Devlin et al. 2018; Table 2 hyperparameters).
+
+24L d_model=1024 16H (MHA) d_ff=4096 vocab=30522, learned positions, GeLU MLP,
+post-LayerNorm blocks, biases everywhere, tied MLM head. Pre-training shapes are the
+paper's Phase-1 (n=128) and Phase-2 (n=512) at mini-batch 4..32 — see
+benchmarks.breakdown which reproduces Figure 4 cells Ph{1,2}-B{4,32}-FP{32,16}.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="bert-large",
+    family="dense",
+    num_layers=24,
+    d_model=1_024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=4_096,
+    vocab_size=30_522,
+    head_dim=64,
+    mlp="gelu",
+    norm="layernorm",
+    pos_emb="learned",
+    use_bias=True,
+    tie_embeddings=True,
+    post_norm=True,
+    bidirectional=True,
+    mlm_transform=True,
+    max_position=512,
+)

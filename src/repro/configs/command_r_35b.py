@@ -1,0 +1,25 @@
+"""command-r-35b [dense] — hf:CohereForAI/c4ai-command-r-v01 (unverified).
+
+40L d_model=8192 64H (GQA kv=8) d_ff=22528 vocab=256000 — GQA, no-bias linears.
+Cohere uses plain LayerNorm (no bias) and a large 256k vocabulary, which makes this
+arch the embedding/logits-sharding stress test of the grid.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="command-r-35b",
+    family="dense",
+    num_layers=40,
+    d_model=8_192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=22_528,
+    vocab_size=256_000,
+    head_dim=128,
+    mlp="swiglu",
+    norm="layernorm",
+    pos_emb="rope",
+    rope_theta=8_000_000.0,
+    use_bias=False,
+    tie_embeddings=True,
+)

@@ -1,0 +1,35 @@
+"""deepseek-moe-16b [moe] — arXiv:2401.06066.
+
+28L d_model=2048 16H (MHA, kv=16) per-expert d_ff=1408 vocab=102400,
+fine-grained MoE: 64 routed experts top-6 + 2 shared experts.
+
+Paper-characterization relevance: total params (~16B) >> active params (~2.8B), so the
+LAMB optimizer reads/writes 4x *total* model size while step FLOPs track *active*
+params — Takeaway 8 (memory-intensity of the optimizer) is amplified ~6x vs dense.
+"""
+from .base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-moe-16b",
+    family="moe",
+    num_layers=28,
+    d_model=2_048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=1_408,
+    vocab_size=102_400,
+    head_dim=128,
+    mlp="swiglu",
+    norm="rmsnorm",
+    pos_emb="rope",
+    use_bias=False,
+    moe=MoEConfig(
+        num_experts=64,
+        top_k=6,
+        num_shared_experts=2,
+        expert_ff=1_408,
+        capacity_factor=1.25,
+        every=1,
+        first=0,
+    ),
+)

@@ -1,0 +1,45 @@
+"""jamba-v0.1-52b [hybrid] — arXiv:2403.19887.
+
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=65536, MoE 16 experts top-2.
+Mamba:attention 7:1 interleave (one attention layer per 8-layer period, at period
+index 4 as in the released model); MoE every other layer starting at layer 1.
+
+Runs the long_500k cell: only 4 of 32 layers are attention, each holding a KV cache
+that is read linearly per decoded token; the 28 Mamba layers carry constant-size state.
+"""
+from .base import ArchConfig, MoEConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    num_layers=32,
+    d_model=4_096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14_336,
+    vocab_size=65_536,
+    head_dim=128,
+    mlp="swiglu",
+    norm="rmsnorm",
+    pos_emb="none",            # jamba uses no positional encoding (mamba provides order)
+    use_bias=False,
+    hybrid_period=8,
+    hybrid_attn_index=4,
+    moe=MoEConfig(
+        num_experts=16,
+        top_k=2,
+        num_shared_experts=0,
+        expert_ff=14_336,
+        capacity_factor=1.25,
+        every=2,
+        first=1,
+    ),
+    ssm=SSMConfig(
+        state_dim=16,          # jamba uses mamba-1 style small state
+        head_dim=64,
+        expand=2,
+        chunk=256,
+        conv_width=4,
+        ngroups=1,
+    ),
+)

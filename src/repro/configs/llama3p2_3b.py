@@ -1,0 +1,26 @@
+"""llama3.2-3b [dense] — hf:meta-llama/Llama-3.2 family (unverified).
+
+28L d_model=3072 24H (GQA kv=8) d_ff=8192 vocab=128256, head_dim=128.
+24 query heads are NOT divisible by the 16-way model axis — this arch is why tensor
+parallelism in this framework shards fused feature dims (q_dim=3072, kv_dim=1024)
+instead of head counts (see parallel/sharding.py).
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama3.2-3b",
+    family="dense",
+    num_layers=28,
+    d_model=3_072,
+    num_heads=24,
+    num_kv_heads=8,
+    d_ff=8_192,
+    vocab_size=128_256,
+    head_dim=128,
+    mlp="swiglu",
+    norm="rmsnorm",
+    pos_emb="rope",
+    rope_theta=500_000.0,
+    use_bias=False,
+    tie_embeddings=True,
+)

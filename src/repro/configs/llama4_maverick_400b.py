@@ -1,0 +1,37 @@
+"""llama4-maverick-400b-a17b [moe] — hf:meta-llama/Llama-4 family (unverified).
+
+48L d_model=5120 40H (GQA kv=8) d_ff=8192 vocab=202048, MoE 128 experts top-1,
+interleaved (every other layer MoE, one shared expert on MoE layers).
+
+At ~400B total parameters this arch is the memory-capacity stress test: fp32 LAMB
+states are 3.2 TB and require ZeRO-1 sharding over the data axis (the paper's own
+citation [60]) to fit 16 GB/chip on the 16x16 pod — the dry-run's memory_analysis
+proves it.
+"""
+from .base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    num_layers=48,
+    d_model=5_120,
+    num_heads=40,
+    num_kv_heads=8,
+    d_ff=8_192,
+    vocab_size=202_048,
+    head_dim=128,
+    mlp="swiglu",
+    norm="rmsnorm",
+    pos_emb="rope",
+    rope_theta=500_000.0,
+    use_bias=False,
+    moe=MoEConfig(
+        num_experts=128,
+        top_k=1,
+        num_shared_experts=1,
+        expert_ff=8_192,
+        capacity_factor=1.25,
+        every=2,          # interleaved MoE: odd layers routed, even layers dense
+        first=1,
+    ),
+)

@@ -1,0 +1,35 @@
+"""mamba2-1.3b [ssm] — arXiv:2405.21060 (state-space duality, unverified).
+
+48L d_model=2048 (attention-free), vocab=50280, ssm_state=128.
+SSD inner dim = 2*d_model = 4096, head_dim=64 -> 64 SSD heads; chunked scan with
+chunk=256 turns the recurrence into MXU-friendly batched GEMMs (the TPU adaptation of
+the paper's "not all GEMMs are equal": SSD chunk GEMMs are the skinny ones here).
+
+Runs the long_500k cell: the recurrent state is O(heads * head_dim * state) regardless
+of context length.
+"""
+from .base import ArchConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-1.3b",
+    family="ssm",
+    num_layers=48,
+    d_model=2_048,
+    num_heads=0,
+    num_kv_heads=0,
+    d_ff=0,
+    vocab_size=50_280,         # pads to 50304, the standard GPT-NeoX padding
+    mlp="swiglu",
+    norm="rmsnorm",
+    pos_emb="none",
+    use_bias=False,
+    tie_embeddings=True,
+    ssm=SSMConfig(
+        state_dim=128,
+        head_dim=64,
+        expand=2,
+        chunk=256,
+        conv_width=4,
+        ngroups=1,
+    ),
+)

@@ -1,0 +1,27 @@
+"""qwen2-vl-2b [vlm] — arXiv:2409.12191.
+
+28L d_model=1536 12H (GQA kv=2) d_ff=8960 vocab=151936, head_dim=128.
+M-RoPE (multimodal rotary: temporal/height/width position triplets) on the text
+backbone; the vision patch frontend is a STUB per the assignment — patch embeddings
+arrive pre-computed and positions arrive as (3, batch, seq) M-RoPE ids.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-vl-2b",
+    family="vlm",
+    num_layers=28,
+    d_model=1_536,
+    num_heads=12,
+    num_kv_heads=2,
+    d_ff=8_960,
+    vocab_size=151_936,
+    head_dim=128,
+    mlp="swiglu",
+    norm="rmsnorm",
+    pos_emb="mrope",
+    rope_theta=1_000_000.0,
+    use_bias=True,             # qwen2 uses bias on qkv projections
+    tie_embeddings=True,
+    frontend="vision_stub",
+)

@@ -1,0 +1,76 @@
+"""The assignment's four input-shape cells + ShapeDtypeStruct input specs.
+
+``train_*``    lower ``train_step`` (tokens + targets).
+``prefill_*``  lower ``prefill_step`` (tokens -> logits + KV cache).
+``decode_*``   lower ``serve_step`` (one new token against a seq_len KV cache).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .base import ArchConfig, ShapeConfig
+
+TRAIN_4K = ShapeConfig("train_4k", seq_len=4_096, global_batch=256, kind="train")
+PREFILL_32K = ShapeConfig("prefill_32k", seq_len=32_768, global_batch=32, kind="prefill")
+DECODE_32K = ShapeConfig("decode_32k", seq_len=32_768, global_batch=128, kind="decode")
+LONG_500K = ShapeConfig("long_500k", seq_len=524_288, global_batch=1, kind="decode")
+
+SHAPES: Dict[str, ShapeConfig] = {
+    s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+}
+
+# Archs allowed to run the long_500k cell (sub-quadratic sequence mixing).
+LONG_CONTEXT_FAMILIES = ("ssm", "hybrid")
+
+
+def cell_supported(arch: ArchConfig, shape: ShapeConfig) -> str:
+    """'' if the (arch, shape) cell runs; otherwise a skip reason."""
+    if shape.name == "long_500k" and arch.family not in LONG_CONTEXT_FAMILIES:
+        return "SKIP(full-attention: long_500k needs sub-quadratic sequence mixing)"
+    return ""
+
+
+def token_spec(shape, dtype=jnp.int32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(arch: ArchConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    No device memory is allocated — these feed ``jax.jit(...).lower()`` only.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    act = jnp.dtype(arch.dtype)
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    if shape.kind == "train":
+        specs["tokens"] = token_spec((b, s))
+        specs["targets"] = token_spec((b, s))
+        specs["loss_mask"] = jax.ShapeDtypeStruct((b, s), act)
+        if arch.family == "encdec":
+            # frontend stub: precomputed frame embeddings for the encoder
+            specs["frontend_embeddings"] = jax.ShapeDtypeStruct(
+                (b, arch.enc_seq_len, arch.d_model), act)
+        if arch.frontend == "vision_stub":
+            # a fixed budget of patch embeddings prepended to the text sequence is
+            # modeled as part of the sequence itself; positions arrive via M-RoPE ids
+            specs["mrope_positions"] = token_spec((3, b, s))
+    elif shape.kind == "prefill":
+        specs["tokens"] = token_spec((b, s))
+        if arch.family == "encdec":
+            specs["frontend_embeddings"] = jax.ShapeDtypeStruct(
+                (b, arch.enc_seq_len, arch.d_model), act)
+        if arch.frontend == "vision_stub":
+            specs["mrope_positions"] = token_spec((3, b, s))
+    elif shape.kind == "decode":
+        # one new token per sequence; the cache itself is threaded through the step
+        # as state (see train.steps.make_serve_step) and is part of in_shardings.
+        specs["tokens"] = token_spec((b, 1))
+        specs["positions"] = token_spec((b,))
+        if arch.frontend == "vision_stub":
+            specs["mrope_positions"] = token_spec((3, b, 1))
+    else:
+        raise ValueError(shape.kind)
+    return specs

@@ -1,0 +1,31 @@
+"""whisper-base [audio] — arXiv:2212.04356 (unverified).
+
+6L (enc) + 6L (dec), d_model=512 8H (MHA) d_ff=2048 vocab=51865, head_dim=64.
+Encoder-decoder; the conv audio frontend is a STUB per the assignment —
+``input_specs()`` provides precomputed frame embeddings of shape
+(batch, enc_seq_len=1500, d_model).
+
+Note: whisper's natural decoder length is 448; the grid's 32k decode cells are
+configuration exercises for the serving path (noted in DESIGN.md).
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-base",
+    family="encdec",
+    num_layers=6,              # decoder layers
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=8,
+    d_ff=2_048,
+    vocab_size=51_865,         # padded to a multiple of 128 inside the embed layer
+    head_dim=64,
+    mlp="gelu",
+    norm="layernorm",
+    pos_emb="sinusoidal",
+    use_bias=True,
+    tie_embeddings=True,
+    enc_layers=6,
+    enc_seq_len=1_500,
+    frontend="audio_stub",
+)

@@ -1,0 +1,449 @@
+"""Operator-level cost engine over compiled HLO text — the paper's methodology.
+
+XLA's built-in ``compiled.cost_analysis()`` counts while-loop bodies ONCE, so any
+scanned-layer model under-reports FLOPs/bytes by the layer count. This engine walks
+the compiled module's call graph, multiplies loop bodies by their
+``known_trip_count``, prices every instruction (dot / fusion / reduce / collective /
+data movement), and buckets costs by the paper's taxonomy AND by ``op_name`` metadata
+(jax name_scopes), reproducing the paper's Fig 4/5-style runtime breakdowns from a
+full-scale compiled artifact.
+
+Pricing rules (per-device shapes — SPMD modules are per-device programs):
+  dot         flops = 2 * prod(result) * prod(contracting dims); bytes = ops + out
+  fusion      bytes = operands + result (internal traffic stays in registers/VMEM —
+              the fusion benefit the paper measures); flops = elementwise body ops
+  reduce      flops = input elements; bytes = in + out
+  collectives bytes = operands (+ wire model in hlotext); no flops
+  data mvmt   bytes = operands + result; no flops
+  while       cost(body) * known_trip_count + cost(cond)
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+from .hlotext import (CollectiveOp, CollectiveSummary, _COLL_KINDS,
+                      _DTYPE_BYTES, _group_size, shape_bytes)
+
+_TYPE_RE = re.compile(
+    r"^(\((?:[^()]|\([^)]*\))*\)|\w+\[[^\]]*\](?:\{[^}]*\})?)\s*(.*)$")
+_OP_RE = re.compile(r"^([\w\-]+)\(")
+_SHAPE_ONLY_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_TRIP_RE = re.compile(r'known_trip_count\\?":\{\\?"n\\?":\\?"(\d+)\\?"')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_EW_OPS = {
+    "add", "subtract", "multiply", "divide", "power", "maximum", "minimum",
+    "exponential", "exponential-minus-one", "tanh", "negate", "abs", "sign",
+    "log", "log-plus-one", "rsqrt", "sqrt", "cbrt", "sine", "cosine", "floor",
+    "ceil", "round-nearest-afz", "round-nearest-even", "logistic", "atan2",
+    "compare", "select", "and", "or", "xor", "not", "clamp", "remainder",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic", "erf",
+}
+_FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "bitcast-convert", "after-all", "partition-id", "replica-id", "domain",
+    "opt-barrier", "get-dimension-size", "rng-get-and-update-state",
+    # the CPU backend float-normalizes bf16 compute (bf16 -> f32 converts around
+    # whole buffers, incl. scan carries); TPU executes bf16 natively, so converts
+    # are priced as free — genuine cast traffic is captured by neighbors' bytes
+    "convert",
+}
+_MOVE_OPS = {
+    "copy", "copy-start", "copy-done", "transpose", "reshape", "broadcast",
+    "iota", "dynamic-slice", "dynamic-update-slice", "gather", "scatter",
+    "pad", "concatenate", "slice", "reverse", "convert", "rng-bit-generator",
+    "map", "reduce-window", "select-and-scatter", "real", "imag", "complex",
+    "custom-call", "infeed", "outfeed", "rng",
+}
+
+
+def _shape_elems(type_str: str) -> int:
+    total = 0
+    for _, dims in _SHAPE_ONLY_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    rest: str                               # everything after the op's '('
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params: Dict[str, str]                  # param name -> type str
+    instrs: List[Instr]
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    by_category: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    by_category_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    by_scope: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    by_scope_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    collectives: List[CollectiveOp] = dataclasses.field(default_factory=list)
+
+    def add(self, other: "Cost", scale: float = 1.0) -> None:
+        self.flops += other.flops * scale
+        self.bytes += other.bytes * scale
+        for k, v in other.by_category.items():
+            self.by_category[k] += v * scale
+        for k, v in other.by_category_bytes.items():
+            self.by_category_bytes[k] += v * scale
+        for k, v in other.by_scope.items():
+            self.by_scope[k] += v * scale
+        for k, v in other.by_scope_bytes.items():
+            self.by_scope_bytes[k] += v * scale
+        for c in other.collectives:
+            n = int(round(scale))
+            self.collectives.extend([c] * max(n, 1))
+
+    def summary(self) -> CollectiveSummary:
+        return CollectiveSummary(self.collectives)
+
+
+# ------------------------------------------------------------------- parsing ------
+
+# greedy param capture: tuple params nest parens, and '->' appears exactly once
+_COMP_HDR = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->.*\{")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m and line.rstrip().endswith("{"):
+                name, params_str = m.group(1), m.group(2)
+                params = {}
+                for part in re.findall(r"([\w.\-]+)\s*:\s*"
+                                       r"(\([^)]*\)|\w+\[[^\]]*\])", params_str):
+                    params[part[0]] = part[1]
+                cur = Computation(name=name, params=params, instrs=[])
+                if line.lstrip().startswith("ENTRY"):
+                    entry = name
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        tm = _TYPE_RE.match(rhs)
+        if not tm:
+            continue
+        type_str, rest = tm.groups()
+        om = _OP_RE.match(rest.strip())
+        if not om:
+            continue
+        cur.instrs.append(Instr(name=name, type_str=type_str,
+                                op=om.group(1), rest=rest, line=line))
+    if entry is None:
+        # fall back: the computation containing the most instructions
+        entry = max(comps, key=lambda c: len(comps[c].instrs)) if comps else ""
+    return comps, entry
+
+
+# -------------------------------------------------------------------- pricing -----
+
+def _categorize(op: str, rest: str) -> str:
+    if op in ("dot", "convolution"):
+        return "gemm"
+    if op.replace("-start", "") in _COLL_KINDS:
+        return "collective"
+    if op in ("reduce",):
+        return "reduction"
+    if op == "fusion":
+        return "fusion"
+    if op == "sort":
+        return "sort"
+    if op in _MOVE_OPS:
+        return "data_movement"
+    if op in _EW_OPS:
+        return "elementwise"
+    return "other"
+
+
+def _scope_of(line: str) -> str:
+    m = _OPNAME_RE.search(line)
+    if not m:
+        return "unattributed"
+    return m.group(1)
+
+
+class Engine:
+    def __init__(self, text: str, n_devices: int):
+        self.comps, self.entry = parse_module(text)
+        self.n_devices = n_devices
+        self._cache: Dict[str, Cost] = {}
+
+    # -- per-computation def table ------------------------------------------------
+    def _types(self, comp: Computation) -> Dict[str, str]:
+        table = dict(comp.params)
+        for ins in comp.instrs:
+            table[ins.name] = ins.type_str
+        return table
+
+    def _operand_bytes(self, ins: Instr, table: Dict[str, str]) -> int:
+        m = re.match(rf"{re.escape(ins.op)}\(([^)]*)\)", ins.rest.strip())
+        if not m:
+            return 0
+        total = 0
+        for opnd in m.group(1).split(","):
+            opnd = opnd.strip().lstrip("%")
+            if opnd in table:
+                total += shape_bytes(table[opnd])
+        return total
+
+    def _operand_shapes(self, ins: Instr, table: Dict[str, str]) -> List[str]:
+        m = re.match(rf"{re.escape(ins.op)}\(([^)]*)\)", ins.rest.strip())
+        if not m:
+            return []
+        return [table.get(o.strip().lstrip("%"), "") for o in
+                m.group(1).split(",")]
+
+    # -- fusion body flops ----------------------------------------------------------
+    def _fusion_flops(self, comp_name: str) -> float:
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return 0.0
+        flops = 0.0
+        for ins in comp.instrs:
+            if ins.op in _EW_OPS:
+                flops += _shape_elems(ins.type_str)
+            elif ins.op == "reduce":
+                shapes = self._operand_shapes(ins, self._types(comp))
+                flops += _shape_elems(shapes[0]) if shapes else 0
+            elif ins.op == "dot":
+                flops += self._dot_flops(ins, self._types(comp))
+            elif ins.op == "fusion":
+                m = _CALLS_RE.search(ins.rest)
+                if m:
+                    flops += self._fusion_flops(m.group(1))
+        return flops
+
+    def _fusion_inplace_bytes(self, comp_name: str) -> float:
+        """In-place-aware byte estimate for a fusion body.
+
+        Scan machinery wraps cache slicing/updates in fusions whose *operands*
+        are entire stacked buffers; XLA aliases those in place. Pricing each
+        internal op by what actually moves (windows for DS/DUS, results for EW)
+        and taking min() against the standard operands+result estimate keeps
+        both plain EW fusions and slicing fusions honest.
+        """
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return float("inf")
+        table = self._types(comp)
+        total = 0.0
+        for ins in comp.instrs:
+            if ins.op in _FREE_OPS or ins.op == "iota":
+                continue
+            if ins.op == "dynamic-update-slice":
+                shapes = self._operand_shapes(ins, table)
+                total += 2 * (shape_bytes(shapes[1]) if len(shapes) > 1 else 0)
+            elif ins.op in ("dynamic-slice", "slice", "gather"):
+                total += 2 * shape_bytes(ins.type_str)
+            elif ins.op == "scatter":
+                shapes = self._operand_shapes(ins, table)
+                total += 2 * (shape_bytes(shapes[2]) if len(shapes) > 2 else 0)
+            elif ins.op == "fusion":
+                m = _CALLS_RE.search(ins.rest)
+                if m:
+                    total += self._fusion_inplace_bytes(m.group(1))
+            else:
+                total += shape_bytes(ins.type_str)
+        return total
+
+    def _fusion_scope(self, comp_name: str) -> str:
+        """Fallback scope for fusions: first op_name inside the fused body."""
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return "unattributed"
+        for ins in comp.instrs:
+            m = _OPNAME_RE.search(ins.line)
+            if m:
+                return m.group(1)
+        return "unattributed"
+
+    def _dot_flops(self, ins: Instr, table: Dict[str, str]) -> float:
+        out_elems = _shape_elems(ins.type_str)
+        shapes = self._operand_shapes(ins, table)
+        contract = 1
+        m = _CONTRACT_RE.search(ins.rest)
+        if m and shapes and shapes[0]:
+            dims_str = _SHAPE_ONLY_RE.findall(shapes[0])
+            if dims_str:
+                lhs_dims = [int(d) for d in dims_str[0][1].split(",") if d]
+                for ci in m.group(1).split(","):
+                    if ci != "" and int(ci) < len(lhs_dims):
+                        contract *= lhs_dims[int(ci)]
+        return 2.0 * out_elems * contract
+
+    # -- main recursion ------------------------------------------------------------
+    def cost_of(self, comp_name: str) -> Cost:
+        if comp_name in self._cache:
+            return self._cache[comp_name]
+        comp = self.comps.get(comp_name)
+        cost = Cost()
+        if comp is None:
+            self._cache[comp_name] = cost
+            return cost
+        table = self._types(comp)
+        for ins in comp.instrs:
+            cat = _categorize(ins.op, ins.rest)
+            scope = _scope_of(ins.line)
+            if scope == "unattributed" and ins.op == "fusion":
+                m = _CALLS_RE.search(ins.rest)
+                if m:
+                    scope = self._fusion_scope(m.group(1))
+            f = b = 0.0
+            if ins.op == "while":
+                body = _BODY_RE.search(ins.rest)
+                cond = _COND_RE.search(ins.rest)
+                trips = 1
+                tm = _TRIP_RE.search(ins.line)
+                if tm:
+                    trips = int(tm.group(1))
+                if body:
+                    cost.add(self.cost_of(body.group(1)), scale=trips)
+                if cond:
+                    cost.add(self.cost_of(cond.group(1)), scale=trips)
+                continue
+            if ins.op in ("call", "async-start"):
+                m = _CALLS_RE.search(ins.rest) or re.search(
+                    r"to_apply=%?([\w.\-]+)", ins.rest)
+                if m:
+                    cost.add(self.cost_of(m.group(1)))
+                continue
+            if ins.op == "conditional":
+                for m in re.finditer(r"(?:branch_computations=\{([^}]*)\}|"
+                                     r"(?:true|false)_computation=%?([\w.\-]+))",
+                                     ins.rest):
+                    names = (m.group(1) or m.group(2) or "").replace("%", "")
+                    for nm in names.split(","):
+                        nm = nm.strip()
+                        if nm:
+                            cost.add(self.cost_of(nm))
+                continue
+            if ins.op in _FREE_OPS:
+                continue
+            kind = ins.op.replace("-start", "")
+            if kind in _COLL_KINDS:
+                if ins.op.endswith("-done"):
+                    continue
+                rb = shape_bytes(ins.type_str)
+                ob = self._operand_bytes(ins, table) or rb
+                g, crosses = _group_size(ins.line, self.n_devices)
+                cost.collectives.append(CollectiveOp(
+                    kind=kind, result_bytes=rb, operand_bytes=ob,
+                    group_size=g, crosses_pod=crosses, name=ins.name))
+                b = ob
+            elif ins.op == "fusion":
+                b = self._operand_bytes(ins, table) + shape_bytes(ins.type_str)
+                m = _CALLS_RE.search(ins.rest)
+                if m:
+                    b = min(b, self._fusion_inplace_bytes(m.group(1)))
+                f = self._fusion_flops(m.group(1)) if m else 0.0
+                # fusions that wrap a dot are GEMMs for taxonomy purposes
+                if m and any(i.op == "dot" for i in
+                             self.comps.get(m.group(1), Computation("", {}, [])
+                                            ).instrs):
+                    cat = "gemm"
+            elif ins.op == "dot":
+                f = self._dot_flops(ins, table)
+                b = self._operand_bytes(ins, table) + shape_bytes(ins.type_str)
+            elif ins.op == "reduce":
+                shapes = self._operand_shapes(ins, table)
+                f = float(_shape_elems(shapes[0])) if shapes else 0.0
+                b = self._operand_bytes(ins, table) + shape_bytes(ins.type_str)
+            elif ins.op in _EW_OPS:
+                f = float(_shape_elems(ins.type_str))
+                b = self._operand_bytes(ins, table) + shape_bytes(ins.type_str)
+            elif ins.op == "dynamic-update-slice":
+                # in-place semantics on TPU: only the update window moves
+                shapes = self._operand_shapes(ins, table)
+                upd = shape_bytes(shapes[1]) if len(shapes) > 1 else 0
+                b = 2 * upd
+            elif ins.op in ("dynamic-slice", "slice", "gather"):
+                # read the window, write the result — not the whole operand
+                b = 2 * shape_bytes(ins.type_str)
+            elif ins.op == "scatter":
+                shapes = self._operand_shapes(ins, table)
+                b = 2 * (shape_bytes(shapes[2]) if len(shapes) > 2
+                         else shape_bytes(ins.type_str))
+            elif ins.op in ("copy", "copy-start"):
+                # loop double-buffer copies are aliased on TPU; count one pass
+                b = shape_bytes(ins.type_str)
+            else:  # data movement & misc
+                b = self._operand_bytes(ins, table) + shape_bytes(ins.type_str)
+            cost.flops += f
+            cost.bytes += b
+            cost.by_category[cat] += f
+            cost.by_category_bytes[cat] += b
+            cost.by_scope[scope] += f
+            cost.by_scope_bytes[scope] += b
+        self._cache[comp_name] = cost
+        return cost
+
+
+def analyze_text(text: str, n_devices: int) -> Cost:
+    eng = Engine(text, n_devices)
+    return eng.cost_of(eng.entry)
+
+
+# ------------------------------------------------------- scope bucketing ----------
+
+_SCOPE_BUCKETS = (
+    ("lamb", re.compile(r"lamb|optimizer|adamw|sgd", re.I)),
+    ("attn_linear", re.compile(r"attn_qkv|attn_out|qkv_project", re.I)),
+    ("attn_bgemm", re.compile(r"attn_core|attn_softmax", re.I)),
+    ("moe", re.compile(r"moe", re.I)),
+    ("mlp", re.compile(r"mlp|gelu|swiglu", re.I)),
+    ("ssm", re.compile(r"mamba|ssd", re.I)),
+    ("norm", re.compile(r"norm|ln", re.I)),
+    ("embed_or_head", re.compile(r"embed|logits|unembed|head", re.I)),
+    ("loss", re.compile(r"loss|cross_entropy|softmax_xent", re.I)),
+)
+
+
+def bucket_scopes(by_scope: Dict[str, float]) -> Dict[str, float]:
+    """Fold fine-grained op_name scopes into paper-style buckets (Fig 4/5)."""
+    out: Dict[str, float] = defaultdict(float)
+    for scope, v in by_scope.items():
+        for bucket, pat in _SCOPE_BUCKETS:
+            if pat.search(scope):
+                out[bucket] += v
+                break
+        else:
+            out["other"] += v
+    return dict(out)

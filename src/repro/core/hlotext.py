@@ -1,0 +1,229 @@
+"""HLO-text parsing: collective inventory, op taxonomy, fusion counts.
+
+The compiled module of an SPMD program is the *per-device* program; shapes here are
+per-device shards. Collective wire-byte models (ring algorithms):
+
+    all-reduce       2 (g-1)/g * bytes      (reduce-scatter + all-gather phases)
+    all-gather       (g-1)/g   * out_bytes
+    reduce-scatter   (g-1)/g   * in_bytes
+    all-to-all       (g-1)/g   * bytes
+    collective-permute bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "collective-broadcast", "ragged-all-to-all")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    result_bytes: int
+    operand_bytes: int
+    group_size: int
+    crosses_pod: bool
+    name: str
+
+    @property
+    def wire_bytes(self) -> float:
+        g = max(self.group_size, 1)
+        if g == 1:
+            return 0.0
+        frac = (g - 1) / g
+        if self.kind == "all-reduce":
+            return 2.0 * frac * self.operand_bytes
+        if self.kind == "all-gather":
+            return frac * self.result_bytes
+        if self.kind == "reduce-scatter":
+            return frac * self.operand_bytes
+        if self.kind in ("all-to-all", "ragged-all-to-all"):
+            return frac * self.operand_bytes
+        if self.kind == "collective-broadcast":
+            return self.result_bytes
+        return float(self.operand_bytes)   # collective-permute
+
+
+@dataclasses.dataclass
+class CollectiveSummary:
+    ops: List[CollectiveOp]
+
+    @property
+    def operand_bytes(self) -> float:
+        return float(sum(o.operand_bytes for o in self.ops))
+
+    @property
+    def result_bytes(self) -> float:
+        return float(sum(o.result_bytes for o in self.ops))
+
+    @property
+    def wire_bytes_ici(self) -> float:
+        return float(sum(o.wire_bytes for o in self.ops if not o.crosses_pod))
+
+    @property
+    def wire_bytes_dcn(self) -> float:
+        return float(sum(o.wire_bytes for o in self.ops if o.crosses_pod))
+
+    def by_kind(self) -> Dict[str, Dict[str, float]]:
+        out: Dict[str, Dict[str, float]] = {}
+        for o in self.ops:
+            d = out.setdefault(o.kind, {"count": 0, "operand_bytes": 0.0,
+                                        "wire_bytes": 0.0})
+            d["count"] += 1
+            d["operand_bytes"] += o.operand_bytes
+            d["wire_bytes"] += o.wire_bytes
+        return out
+
+    def to_dict(self) -> Dict:
+        return {"operand_bytes": self.operand_bytes,
+                "result_bytes": self.result_bytes,
+                "wire_bytes_ici": self.wire_bytes_ici,
+                "wire_bytes_dcn": self.wire_bytes_dcn,
+                "count": len(self.ops),
+                "by_kind": self.by_kind()}
+
+
+def _build_def_table(text: str) -> Dict[str, str]:
+    """op name -> result type string."""
+    table: Dict[str, str] = {}
+    for line in text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        # rhs starts with the result type, e.g. "f32[64,1024]{1,0} all-reduce(..."
+        tm = re.match(r"^(\([^)]*\)|\w+\[[\d,]*\](?:\{[^}]*\})?)", rhs)
+        if tm:
+            table[name] = tm.group(1)
+    return table
+
+
+def _group_size(line: str, n_devices: int) -> Tuple[int, bool]:
+    """(group size, crosses_pod?) — pod-crossing detected from device-id stride."""
+    m = _GROUPS_RE.search(line)
+    if m:
+        n_groups, g = int(m.group(1)), int(m.group(2))
+        # iota groups [n,g]<=[N] fill contiguously: within-pod iff the whole group
+        # fits inside one 256-device pod
+        crosses = g > 256 or (n_devices > 256 and n_groups * g > 256 and
+                              _iota_crosses_pod(line, g))
+        return g, crosses
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0].strip("{ ")
+        ids = [int(x) for x in first.split(",") if x.strip() != ""]
+        crosses = len({i // 256 for i in ids}) > 1 if ids else False
+        return max(len(ids), 1), crosses
+    return n_devices, n_devices > 256
+
+
+def _iota_crosses_pod(line: str, g: int) -> bool:
+    # replica_groups=[n,g]<=[a,b,...]T(perm) iota form: conservatively assume a
+    # group crosses pods when its index-space span exceeds one pod
+    m = re.search(r"<=\[([\d,]+)\]", line)
+    if not m:
+        return False
+    dims = [int(x) for x in m.group(1).split(",")]
+    total = 1
+    for d in dims:
+        total *= d
+    # contiguous iota: group stride = total / n_groups
+    return g > 1 and total > 256 and (total // max(total // g // 1, 1)) > 256
+
+
+def parse_collectives(text: str, n_devices: int) -> CollectiveSummary:
+    table = _build_def_table(text)
+    ops: List[CollectiveOp] = []
+    seen_names = set()
+    for line in text.splitlines():
+        stripped = line.strip()
+        m = _DEF_RE.match(stripped)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        kind = None
+        for k in _COLL_KINDS:
+            if re.search(rf"\s{k}(?:-start)?\(", rhs) or \
+               rhs.split("}")[-1].lstrip().startswith(k):
+                kind = k
+                break
+        if kind is None:
+            continue
+        if re.search(r"\b(all-reduce|all-gather|all-to-all|reduce-scatter|"
+                     r"collective-permute)-done\b", rhs):
+            continue                      # async pair: count the -start only
+        if name in seen_names:
+            continue
+        seen_names.add(name)
+        result_bytes = shape_bytes(table.get(name, rhs))
+        # operands: names inside the call parens
+        call = re.search(rf"{kind}(?:-start)?\(([^)]*)\)", rhs)
+        operand_bytes = 0
+        if call:
+            for opnd in call.group(1).split(","):
+                opnd = opnd.strip().lstrip("%")
+                if opnd in table:
+                    operand_bytes += shape_bytes(table[opnd])
+        if operand_bytes == 0:
+            operand_bytes = result_bytes
+        g, crosses = _group_size(stripped, n_devices)
+        ops.append(CollectiveOp(kind=kind, result_bytes=result_bytes,
+                                operand_bytes=operand_bytes, group_size=g,
+                                crosses_pod=crosses, name=name))
+    return CollectiveSummary(ops)
+
+
+# --------------------------------------------------------------- op taxonomy ------
+
+_TAXONOMY_PATTERNS = (
+    ("gemm", re.compile(r"\b(dot|convolution)\(")),
+    ("collective", re.compile(r"\b(all-reduce|all-gather|reduce-scatter|"
+                              r"all-to-all|collective-permute)(?:-start)?\(")),
+    ("reduction", re.compile(r"\breduce(?:-window)?\(")),
+    ("scatter_gather", re.compile(r"\b(scatter|gather|dynamic-slice|"
+                                  r"dynamic-update-slice)\(")),
+    ("elementwise_fusion", re.compile(r"\bfusion\(")),
+    ("sort", re.compile(r"\bsort\(")),
+)
+
+
+def categorize_ops(text: str) -> Dict[str, int]:
+    """Count HLO ops by the paper's taxonomy (GEMM / EW / reduction / ...)."""
+    counts: Dict[str, int] = {}
+    for line in text.splitlines():
+        for cat, pat in _TAXONOMY_PATTERNS:
+            if pat.search(line):
+                counts[cat] = counts.get(cat, 0) + 1
+                break
+    return counts
+
+
+def count_fusions(text: str) -> int:
+    return len(re.findall(r"\bfusion\(", text))

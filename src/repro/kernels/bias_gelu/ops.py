@@ -1,0 +1,18 @@
+"""jit'd wrapper for fused bias+GeLU; ref fallback off-TPU."""
+from __future__ import annotations
+
+import jax
+
+from . import kernel, ref
+
+
+def supported() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def bias_gelu(x, bias=None, *, interpret: bool = False):
+    if not (supported() or interpret):
+        return ref.bias_gelu(x, bias)
+    shape = x.shape
+    y = kernel.bias_gelu(x.reshape(-1, shape[-1]), bias, interpret=interpret)
+    return y.reshape(shape)

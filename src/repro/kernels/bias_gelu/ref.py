@@ -1,0 +1,10 @@
+"""Oracle for the fused bias+GeLU kernel (paper §3.2.3 GeLU phase)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bias_gelu(x, bias=None):
+    h = x if bias is None else x + bias.astype(x.dtype)
+    return jax.nn.gelu(h, approximate=True)

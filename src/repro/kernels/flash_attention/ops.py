@@ -1,0 +1,34 @@
+"""jit'd wrapper for the Pallas flash-attention kernel (TPU target).
+
+``supported()`` gates dispatch: the kernel lowers on TPU backends only; CPU
+(tests, dry-run) falls back to the chunked pure-JAX path in models/attention.py,
+which is this kernel's oracle at HBM granularity.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def supported() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal, q_offset=0, kv_len=None, window=0,
+                    block_kv=512, interpret=False):
+    """q [B,Sq,Hq,D]; k/v [B,Sk,Hkv,D] (model layout) -> [B,Sq,Hq,D].
+
+    Forward runs the Pallas kernel; gradients flow through the pure-JAX
+    custom-VJP chunked path (models.attention), which is this kernel's oracle.
+    """
+    import jax.numpy as jnp
+    from . import kernel
+    b = q.shape[0]
+    if kv_len is None:
+        kv_len = jnp.full((b,), k.shape[1], jnp.int32)
+    qT = q.transpose(0, 2, 1, 3)
+    kT = k.transpose(0, 2, 1, 3)
+    vT = v.transpose(0, 2, 1, 3)
+    o = kernel.flash_attention_fwd(qT, kT, vT, kv_len, causal=causal,
+                                   q_offset=q_offset, window=window,
+                                   block_kv=block_kv, interpret=interpret)
+    return o.transpose(0, 2, 1, 3)

@@ -1,0 +1,6 @@
+"""Oracle for the Pallas flash-attention kernel: the pure-jnp chunked path."""
+from __future__ import annotations
+
+from ...models.attention import chunked_attention, naive_attention
+
+__all__ = ["chunked_attention", "naive_attention"]

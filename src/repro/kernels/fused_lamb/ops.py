@@ -1,0 +1,48 @@
+"""jit'd wrapper: full Fig-3 LAMB update via the two Pallas kernels.
+
+Pads the flat axis to the kernel tile, runs stage1 (update direction + partial
+norms), combines the per-tile norms into per-row trust ratios, runs stage2.
+Falls back to the pure-jnp reference off-TPU unless ``interpret=True``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+
+def supported() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def lamb_stage12(w, g, m, v, *, ginv, c1, c2, beta1, beta2, eps,
+                 weight_decay, lr, red_axes=(-1,), interpret: bool = False):
+    if not (supported() or interpret):
+        return ref.lamb_stage12(w, g, m, v, ginv=ginv, c1=c1, c2=c2,
+                                beta1=beta1, beta2=beta2, eps=eps,
+                                weight_decay=weight_decay, lr=lr,
+                                red_axes=red_axes)
+    shape = w.shape
+    w2 = w.reshape(-1, shape[-1]).astype(jnp.float32)
+    g2 = g.reshape(-1, shape[-1]).astype(jnp.float32)
+    m2 = m.reshape(-1, shape[-1]).astype(jnp.float32)
+    v2 = v.reshape(-1, shape[-1]).astype(jnp.float32)
+    f = w2.shape[-1]
+    pad = (-f) % kernel.TILE_F
+    if pad:
+        w2, g2, m2, v2 = (jnp.pad(a, ((0, 0), (0, pad)))
+                          for a in (w2, g2, m2, v2))
+    scalars = jnp.stack([jnp.asarray(ginv, jnp.float32),
+                         jnp.asarray(c1, jnp.float32),
+                         jnp.asarray(c2, jnp.float32)])
+    m_new, v_new, u, wsq, usq = kernel.lamb_stage1(
+        w2, g2, m2, v2, scalars, beta1=beta1, beta2=beta2, eps=eps,
+        weight_decay=weight_decay, interpret=interpret)
+    wn = jnp.sqrt(jnp.sum(wsq, axis=-1, keepdims=True))
+    un = jnp.sqrt(jnp.sum(usq, axis=-1, keepdims=True))
+    rr = jnp.where((wn > 0) & (un > 0), wn / jnp.maximum(un, 1e-30), 1.0)
+    w_new = kernel.lamb_stage2(w2, u, rr, lr=lr, interpret=interpret)
+    if pad:
+        w_new, m_new, v_new = (a[:, :f] for a in (w_new, m_new, v_new))
+    return (w_new.reshape(shape), m_new.reshape(shape), v_new.reshape(shape))

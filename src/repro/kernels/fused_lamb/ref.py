@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the fused LAMB kernels (paper Fig 3, Stage 1 + 2)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def lamb_stage1(w, g, m, v, *, ginv, c1, c2, beta1, beta2, eps, weight_decay):
+    """-> (m', v', u) — the update direction before the trust ratio."""
+    gn = g.astype(jnp.float32) * ginv
+    m_new = beta1 * m + (1.0 - beta1) * gn
+    v_new = beta2 * v + (1.0 - beta2) * jnp.square(gn)
+    u = (m_new * c1) / (jnp.sqrt(v_new * c2) + eps) + weight_decay * w
+    return m_new, v_new, u
+
+
+def lamb_stage2(w, u, *, lr, r):
+    """w' = w - lr * r * u with r broadcast per row."""
+    return w - lr * r * u
+
+
+def lamb_stage12(w, g, m, v, *, ginv, c1, c2, beta1, beta2, eps,
+                 weight_decay, lr, red_axes=(-1,)):
+    """Full Fig-3 update on [rows..., F] arrays; trust ratio per row."""
+    m_new, v_new, u = lamb_stage1(w, g, m, v, ginv=ginv, c1=c1, c2=c2,
+                                  beta1=beta1, beta2=beta2, eps=eps,
+                                  weight_decay=weight_decay)
+    wn = jnp.sqrt(jnp.sum(jnp.square(w), axis=red_axes, keepdims=True))
+    un = jnp.sqrt(jnp.sum(jnp.square(u), axis=red_axes, keepdims=True))
+    r = jnp.where((wn > 0) & (un > 0), wn / jnp.maximum(un, 1e-30), 1.0)
+    return lamb_stage2(w, u, lr=lr, r=r), m_new, v_new

@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: fused residual-add + LayerNorm/RMSNorm.
+
+Unfused, this chain is 4 HBM passes (add out, mean/var reduce, normalize read,
+write); fused it is one read of (x, residual) and one write of y, with the
+row statistics living in VMEM — the 6-8x traffic reduction the paper measures
+in Fig 13. Rows are tiled [TILE_R, D]; D must fit VMEM (all assigned archs:
+d_model <= 12288 -> <= 96 KiB fp32 per row).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_R = 256
+
+
+def _ln_kernel(x_ref, res_ref, scale_ref, bias_ref, y_ref, *, eps, rms):
+    h = x_ref[...].astype(jnp.float32) + res_ref[...].astype(jnp.float32)
+    if rms:
+        var = jnp.mean(h * h, axis=-1, keepdims=True)
+        y = h * jax.lax.rsqrt(var + eps)
+    else:
+        mu = jnp.mean(h, axis=-1, keepdims=True)
+        c = h - mu
+        var = jnp.mean(c * c, axis=-1, keepdims=True)
+        y = c * jax.lax.rsqrt(var + eps)
+    y = y * scale_ref[...].astype(jnp.float32)
+    if bias_ref is not None:
+        y = y + bias_ref[...].astype(jnp.float32)
+    y_ref[...] = y.astype(y_ref.dtype)
+
+
+def fused_residual_layernorm(x, residual, scale, bias=None, *, eps=1e-5,
+                             rms: bool = False, interpret: bool = False):
+    """x, residual: [R, D]; scale/bias: [D]."""
+    r, d = x.shape
+    tile = min(TILE_R, r)
+    assert r % tile == 0, (r, tile)
+    row = pl.BlockSpec((tile, d), lambda i: (i, 0))
+    vec = pl.BlockSpec((d,), lambda i: (0,))
+    args = [x, residual, scale]
+    in_specs = [row, row, vec]
+    if bias is not None:
+        args.append(bias)
+        in_specs.append(vec)
+        kern = functools.partial(_ln_kernel, eps=eps, rms=rms)
+    else:
+        kern = functools.partial(
+            lambda xr, rr, sr, yr, *, eps, rms:
+            _ln_kernel(xr, rr, sr, None, yr, eps=eps, rms=rms),
+            eps=eps, rms=rms)
+    return pl.pallas_call(
+        kern,
+        grid=(r // tile,),
+        in_specs=in_specs,
+        out_specs=row,
+        out_shape=jax.ShapeDtypeStruct((r, d), x.dtype),
+        interpret=interpret,
+    )(*args)

@@ -1,0 +1,23 @@
+"""jit'd wrapper for the fused residual+norm kernel; falls back to ref off-TPU."""
+from __future__ import annotations
+
+import jax
+
+from . import kernel, ref
+
+
+def supported() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def fused_residual_layernorm(x, residual, scale, bias=None, *, eps=1e-5,
+                             rms: bool = False, interpret: bool = False):
+    if not (supported() or interpret):
+        return ref.fused_residual_layernorm(x, residual, scale, bias,
+                                            eps=eps, rms=rms)
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    r2 = residual.reshape(-1, shape[-1])
+    y = kernel.fused_residual_layernorm(x2, r2, scale, bias, eps=eps,
+                                        rms=rms, interpret=interpret)
+    return y.reshape(shape)

@@ -1,0 +1,24 @@
+"""Oracle for the fused residual+LayerNorm kernel (paper Fig 13 'LN' fusion)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_residual_layernorm(x, residual, scale, bias=None, *, eps=1e-5,
+                             rms: bool = False):
+    """y = norm(x + residual) * scale (+ bias); stats in fp32."""
+    h = (x.astype(jnp.float32) + residual.astype(jnp.float32))
+    if rms:
+        var = jnp.mean(jnp.square(h), axis=-1, keepdims=True)
+        y = h * jax.lax.rsqrt(var + eps)
+    else:
+        mu = jnp.mean(h, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(h - mu), axis=-1, keepdims=True)
+        y = (h - mu) * jax.lax.rsqrt(var + eps)
+    y = y * scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(x.dtype)

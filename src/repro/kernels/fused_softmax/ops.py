@@ -1,0 +1,22 @@
+"""jit'd wrapper for fused scale+mask+softmax; ref fallback off-TPU."""
+from __future__ import annotations
+
+import jax
+
+from . import kernel, ref
+
+
+def supported() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def scale_mask_softmax(s, *, scale: float, causal: bool, q_offset: int = 0,
+                       interpret: bool = False):
+    if not (supported() or interpret):
+        return ref.scale_mask_softmax(s, scale=scale, causal=causal,
+                                      q_offset=q_offset)
+    shape = s.shape
+    s3 = s.reshape(-1, shape[-2], shape[-1])
+    y = kernel.scale_mask_softmax(s3, scale=scale, causal=causal,
+                                  q_offset=q_offset, interpret=interpret)
+    return y.reshape(shape)

@@ -1,0 +1,20 @@
+"""Oracle for fused scale+mask+softmax (the paper's attention-head EW phase)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def scale_mask_softmax(s, *, scale: float, causal: bool, q_offset: int = 0):
+    """s: [..., Sq, Sk] raw scores -> softmax(scale*s + causal mask), fp32 stats."""
+    x = s.astype(jnp.float32) * scale
+    if causal:
+        sq, sk = s.shape[-2], s.shape[-1]
+        rows = jnp.arange(sq)[:, None] + q_offset
+        cols = jnp.arange(sk)[None, :]
+        x = jnp.where(cols <= rows, x, NEG_INF)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    p = jnp.exp(x - m)
+    return (p / jnp.sum(p, axis=-1, keepdims=True)).astype(s.dtype)

@@ -1,0 +1,29 @@
+"""Production meshes.
+
+Single pod  : (data=16, model=16)              — 256 chips (one v5e pod).
+Multi pod   : (pod=2, data=16, model=16)       — 512 chips; the pod axis carries
+              hierarchical data parallelism over DCN.
+Defined as functions so importing this module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over host (CPU) devices for tests."""
+    n = data * model
+    assert len(jax.devices()) >= n, (len(jax.devices()), n)
+    return make_mesh((data, model), ("data", "model"))

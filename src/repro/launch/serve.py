@@ -1,0 +1,82 @@
+"""Batched serving driver: prefill a prompt batch, then decode tokens.
+
+``python -m repro.launch.serve --arch llama3.2-3b --smoke --batch 4 --prompt-len 32``
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config, smoke_config
+from ..models import build_model
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    arch = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    assert not arch.bidirectional, "encoder-only archs have no decode step"
+    model = build_model(arch)
+    params = model.init(jax.random.key(args.seed))
+    params = jax.tree.map(lambda p: p.astype(jnp.dtype(arch.dtype)), params)
+
+    b, plen, glen = args.batch, args.prompt_len, args.gen_len
+    max_len = plen + glen
+    caches = model.init_caches(None, b, max_len)
+    prompt = jax.random.randint(jax.random.key(1), (b, plen), 5,
+                                arch.vocab_size)
+    batch = {"tokens": prompt}
+    if arch.family == "encdec":
+        batch["frontend_embeddings"] = jax.random.normal(
+            jax.random.key(2), (b, arch.enc_seq_len, arch.d_model)
+        ).astype(jnp.dtype(arch.dtype))
+
+    prefill = jax.jit(model.prefill)
+    decode = jax.jit(model.decode_step, donate_argnums=(1,))
+
+    t0 = time.perf_counter()
+    logits, caches = prefill(params, caches, batch)
+    logits.block_until_ready()
+    t_prefill = time.perf_counter() - t0
+
+    tokens = jnp.argmax(logits[:, -1], axis=-1)
+    generated = [tokens]
+    key = jax.random.key(args.seed + 7)
+    t0 = time.perf_counter()
+    for i in range(glen - 1):
+        db = {"tokens": tokens[:, None],
+              "positions": jnp.full((b,), plen + i, jnp.int32)}
+        logits, caches = decode(params, caches, db)
+        if args.temperature > 0:
+            key, sub = jax.random.split(key)
+            tokens = jax.random.categorical(
+                sub, logits[:, -1] / args.temperature, axis=-1)
+        else:
+            tokens = jnp.argmax(logits[:, -1], axis=-1)
+        generated.append(tokens)
+    jax.block_until_ready(generated[-1])
+    t_decode = time.perf_counter() - t0
+
+    out = np.stack([np.asarray(t) for t in generated], axis=1)
+    print(f"[serve] {arch.name}: prefill {plen} tok x{b} in "
+          f"{t_prefill*1e3:.1f}ms | {glen} decode steps in "
+          f"{t_decode*1e3:.1f}ms ({t_decode/max(glen-1,1)*1e3:.1f} ms/tok)")
+    print(f"[serve] sample generations (first 8 ids/row): "
+          f"{out[:2, :8].tolist()}")
+    return {"tokens": out, "t_prefill": t_prefill, "t_decode": t_decode}
+
+
+if __name__ == "__main__":
+    main()

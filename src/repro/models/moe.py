@@ -1,0 +1,152 @@
+"""Token-choice MoE with sort-based capacity dispatch (drop-on-overflow).
+
+TPU adaptation notes (DESIGN.md §2): the dispatch is *group-local* — tokens are
+sorted into expert buckets independently per batch row, so under [batch -> data]
+sharding every gather/scatter stays on-device and the only collectives are the same
+row-parallel all-reduces a dense MLP needs (expert FF dims are tensor-sharded on the
+model axis). An alternative expert-parallel (experts -> model axis, all-to-all
+exchange) implementation lives in ``repro.parallel.expert_parallel`` and is compared
+in EXPERIMENTS.md §Perf.
+
+FLOP accounting: capacity padding computes on zero slots; ``core.analytical`` reports
+both padded and useful MoE FLOPs (the roofline "useful ratio" catches this).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, MoEConfig
+from ..parallel.sharding import constrain
+from .layers import PyTree, dense_init, silu, gelu
+
+
+def capacity_per_row(seq: int, moe: MoEConfig) -> int:
+    return max(1, math.ceil(seq * moe.top_k * moe.capacity_factor / moe.num_experts))
+
+
+# ------------------------------------------------------------------------- init ---
+
+def init_moe(key, arch: ArchConfig, dtype=jnp.float32) -> PyTree:
+    moe = arch.moe
+    assert moe is not None
+    d = arch.d_model
+    eff = moe.expert_ff or arch.d_ff
+    ks = jax.random.split(key, 8)
+    std = 1.0 / math.sqrt(d)
+    stdf = 1.0 / math.sqrt(eff)
+    p: PyTree = {
+        "router": (jax.random.normal(ks[0], (d, moe.num_experts)) * std
+                   ).astype(jnp.float32),           # router kept fp32 (numerics)
+        "experts": {
+            "w1": (jax.random.truncated_normal(ks[1], -2, 2,
+                                               (moe.num_experts, d, eff)) * std
+                   ).astype(dtype),
+            "w3": (jax.random.truncated_normal(ks[2], -2, 2,
+                                               (moe.num_experts, d, eff)) * std
+                   ).astype(dtype),
+            "w2": (jax.random.truncated_normal(ks[3], -2, 2,
+                                               (moe.num_experts, eff, d)) * stdf
+                   ).astype(dtype),
+        },
+    }
+    if moe.num_shared_experts:
+        shared_ff = eff * moe.num_shared_experts
+        p["shared"] = {
+            "w1": dense_init(ks[4], d, shared_ff, dtype),
+            "w3": dense_init(ks[5], d, shared_ff, dtype),
+            "w2": dense_init(ks[6], shared_ff, d, dtype),
+        }
+    return p
+
+
+# ------------------------------------------------------------------ sort dispatch -
+
+def _route_indices(logits: jax.Array, moe: MoEConfig, capacity: int):
+    """Per-batch-row routing *index* math (cheap int ops; vmapped over rows).
+
+    logits [S, E] fp32 -> (st [S*k] source token ids, sw [S*k] weights,
+    slot [S*k] capacity-slot ids incl. overflow sentinel, valid [S*k]).
+    """
+    s, e = logits.shape
+    probs = jax.nn.softmax(logits, axis=-1)                   # [S, E]
+    top_w, top_ids = jax.lax.top_k(probs, moe.top_k)          # [S, k]
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+
+    flat_e = top_ids.reshape(-1)                              # [S*k]
+    flat_t = jnp.repeat(jnp.arange(s), moe.top_k)             # [S*k]
+    flat_w = top_w.reshape(-1)
+
+    order = jnp.argsort(flat_e)                               # stable
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    start = jnp.searchsorted(se, jnp.arange(e), side="left")  # [E]
+    pos = jnp.arange(s * moe.top_k) - start[se]
+    valid = pos < capacity
+    slot = jnp.where(valid, se * capacity + pos, e * capacity)
+    return st, sw, slot, valid
+
+
+def apply_moe(arch: ArchConfig, p: PyTree, x: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x [B, S, D] -> (y [B, S, D], aux_loss scalar)."""
+    moe = arch.moe
+    b, s, d = x.shape
+    cap = capacity_per_row(s, moe)
+    with jax.named_scope("moe"):
+        return _apply_moe_inner(arch, p, x, moe, cap)
+
+
+def _apply_moe_inner(arch, p, x, moe, cap):
+    b, s, d = x.shape
+    e = moe.num_experts
+    logits = (x.astype(jnp.float32) @ p["router"])            # [B, S, E]
+
+    st, sw, slot, valid = jax.vmap(
+        lambda lr: _route_indices(lr, moe, cap))(logits)      # each [B, S*k]
+
+    def dispatch_row(xr, st_r, slot_r, valid_r):
+        gathered = xr[st_r] * valid_r[:, None].astype(xr.dtype)   # [S*k, D]
+        slots_r = jnp.zeros((e * cap + 1, d), xr.dtype)
+        slots_r = slots_r.at[slot_r].add(gathered)
+        return slots_r[:-1].reshape(e, cap, d)
+
+    slots = jax.vmap(dispatch_row)(x, st, slot, valid)        # [B, E, C, D]
+
+    # expert parallelism: slots all-to-all from [B->data] row-local layout into
+    # [E->model] expert-owner layout; each device runs its E/16 experts' GEMMs
+    slots = constrain(slots, "batch", "experts", None, None)
+    w = p["experts"]
+    act = silu if arch.mlp == "swiglu" else gelu
+    h = act(jnp.einsum("becd,edf->becf", slots, w["w1"].astype(x.dtype)))
+    if arch.mlp == "swiglu":
+        h = h * jnp.einsum("becd,edf->becf", slots, w["w3"].astype(x.dtype))
+    h = constrain(h, "batch", "experts", None, None)
+    out = jnp.einsum("becf,efd->becd", h, w["w2"].astype(x.dtype))
+    out = constrain(out, "batch", "experts", None, None)
+
+    def combine_row(out_r, st_r, sw_r, slot_r, valid_r):
+        flat = jnp.concatenate(
+            [out_r.reshape(e * cap, d), jnp.zeros((1, d), out_r.dtype)], 0)
+        contrib = flat[slot_r] * (sw_r * valid_r).astype(out_r.dtype)[:, None]
+        y_r = jnp.zeros((s, d), out_r.dtype)
+        return y_r.at[st_r].add(contrib)
+
+    y = jax.vmap(combine_row)(out, st, sw, slot, valid)
+    y = constrain(y, "batch", "seq", None)
+
+    if "shared" in p:
+        sh = p["shared"]
+        hs = silu(x @ sh["w1"].astype(x.dtype)) * (x @ sh["w3"].astype(x.dtype))
+        y = y + hs @ sh["w2"].astype(x.dtype)
+
+    # Switch-style load-balancing aux loss: E * sum_e f_e * P_e
+    probs = jax.nn.softmax(logits, axis=-1)                   # [B,S,E] fp32
+    top1 = jnp.argmax(probs, axis=-1)
+    f = jnp.mean(jax.nn.one_hot(top1, moe.num_experts, dtype=jnp.float32),
+                 axis=(0, 1))
+    pmean = jnp.mean(probs, axis=(0, 1))
+    aux = moe.num_experts * jnp.sum(f * pmean) * moe.aux_loss_weight
+    return y, aux

@@ -1,0 +1,265 @@
+"""Block definitions and layer stacks.
+
+Layers are stacked by *period*: the smallest repeating group of layers.
+  dense/ssm/deepseek-moe : period 1
+  llama4 (interleaved)   : period 2 (dense MLP, then MoE)
+  jamba                  : period 8 (mamba x4, attn@4, mamba x3; MoE on odd layers)
+Stacked parameters have a leading [num_periods, ...] axis and are consumed by
+``jax.lax.scan`` (compile-time: one period lowered once — essential for 88-layer
+models on the 512-device dry-run). ``arch.remat`` wraps the period body in
+``jax.checkpoint`` so live activations are one [B, S, D] residual per period.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..parallel.sharding import constrain
+from . import attention as attn_lib
+from . import moe as moe_lib
+from . import ssm as ssm_lib
+from .layers import PyTree, apply_mlp, apply_norm, init_mlp, init_norm
+
+REMAT_POLICY = jax.checkpoint_policies.nothing_saveable
+
+
+# --------------------------------------------------------------------- periods ----
+
+def period_length(arch: ArchConfig) -> int:
+    if arch.family == "hybrid":
+        return arch.hybrid_period
+    if arch.moe is not None and arch.moe.every > 1:
+        return arch.moe.every
+    return 1
+
+
+def layer_kinds(arch: ArchConfig) -> Tuple[Tuple[str, bool], ...]:
+    """Per layer within one period: (mixer kind, has_moe)."""
+    out = []
+    for i in range(period_length(arch)):
+        mixer = "attn" if arch.is_attention_layer(i) else "mamba"
+        out.append((mixer, arch.is_moe_layer(i)))
+    return tuple(out)
+
+
+# ------------------------------------------------------------------------- init ---
+
+def init_block(key, arch: ArchConfig, mixer: str, has_moe: bool,
+               fuse_qkv: bool, dtype, cross: bool = False) -> PyTree:
+    ks = jax.random.split(key, 4)
+    p: PyTree = {"ln1": init_norm(arch.norm, arch.d_model, dtype)}
+    if mixer == "attn":
+        p["attn"] = attn_lib.init_attention(ks[0], arch, fuse_qkv, dtype=dtype)
+    else:
+        p["mamba"] = ssm_lib.init_mamba(ks[0], arch, dtype)
+    if cross:
+        p["ln_x"] = init_norm(arch.norm, arch.d_model, dtype)
+        p["xattn"] = attn_lib.init_attention(ks[2], arch, fuse_qkv=False,
+                                             cross=True, dtype=dtype)
+    if arch.family == "ssm":
+        return p  # mamba2 blocks have no MLP
+    p["ln2"] = init_norm(arch.norm, arch.d_model, dtype)
+    if has_moe:
+        p["moe"] = moe_lib.init_moe(ks[1], arch, dtype)
+    else:
+        p["mlp"] = init_mlp(ks[1], arch.mlp, arch.d_model, arch.d_ff,
+                            arch.use_bias, dtype)
+    return p
+
+
+def init_period(key, arch: ArchConfig, fuse_qkv: bool, dtype,
+                cross: bool = False) -> PyTree:
+    kinds = layer_kinds(arch)
+    ks = jax.random.split(key, len(kinds))
+    return {f"layer_{i}": init_block(ks[i], arch, mixer, has_moe, fuse_qkv,
+                                     dtype, cross)
+            for i, (mixer, has_moe) in enumerate(kinds)}
+
+
+def init_stack(key, arch: ArchConfig, fuse_qkv: bool, dtype,
+               num_layers: Optional[int] = None, cross: bool = False) -> PyTree:
+    plen = period_length(arch) if not cross else 1
+    nl = num_layers if num_layers is not None else arch.num_layers
+    assert nl % plen == 0, (arch.name, nl, plen)
+    nper = nl // plen
+    keys = jax.random.split(key, nper)
+    if arch.scan_layers and nper > 1:
+        return jax.vmap(
+            lambda k: init_period(k, arch, fuse_qkv, dtype, cross))(keys)
+    return {f"period_{z}": init_period(keys[z], arch, fuse_qkv, dtype, cross)
+            for z in range(nper)}
+
+
+# ------------------------------------------------------------------ block apply ---
+
+def apply_block(arch: ArchConfig, p: PyTree, x: jax.Array, mixer: str,
+                positions: jax.Array, causal: bool, mrope_positions=None,
+                enc_out=None) -> Tuple[jax.Array, jax.Array]:
+    """Pre-norm (or BERT post-norm) residual block. Returns (y, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+
+    def mix(h):
+        if mixer == "attn":
+            return attn_lib.apply_attention(arch, p["attn"], h, positions,
+                                            causal=causal,
+                                            mrope_positions=mrope_positions)
+        return ssm_lib.apply_mamba(arch, p["mamba"], h)
+
+    if arch.post_norm:
+        x = apply_norm(arch.norm, p["ln1"], x + mix(x))
+    else:
+        x = x + mix(apply_norm(arch.norm, p["ln1"], x))
+
+    if enc_out is not None and "xattn" in p:
+        h = apply_norm(arch.norm, p["ln_x"], x)
+        enc_kv = attn_lib.project_enc_kv(arch, p["xattn"], enc_out)
+        x = x + attn_lib.apply_cross_attention(arch, p["xattn"], h, enc_kv)
+
+    if arch.family == "ssm":
+        return x, aux
+
+    if arch.post_norm:
+        if "moe" in p:
+            y, aux = moe_lib.apply_moe(arch, p["moe"], x)
+        else:
+            y = apply_mlp(arch.mlp, p["mlp"], x)
+        x = apply_norm(arch.norm, p["ln2"], x + y)
+    else:
+        h = apply_norm(arch.norm, p["ln2"], x)
+        if "moe" in p:
+            y, aux = moe_lib.apply_moe(arch, p["moe"], h)
+        else:
+            y = apply_mlp(arch.mlp, p["mlp"], h)
+        x = x + y
+    return x, aux
+
+
+def apply_period(arch: ArchConfig, p: PyTree, x: jax.Array,
+                 positions: jax.Array, causal: bool, mrope_positions=None,
+                 enc_out=None) -> Tuple[jax.Array, jax.Array]:
+    aux_total = jnp.zeros((), jnp.float32)
+    for i, (mixer, _) in enumerate(layer_kinds(arch)):
+        # sequence-parallel residual stream between blocks (DESIGN.md §4)
+        x = constrain(x, "batch", "seq", "embed")
+        blk = functools.partial(apply_block, arch, mixer=mixer,
+                                positions=positions, causal=causal,
+                                mrope_positions=mrope_positions,
+                                enc_out=enc_out)
+        if arch.remat:
+            # per-block remat: backward recomputes one block's internals at a
+            # time; only the [B,S,D] residual per block stays live
+            blk = jax.checkpoint(blk, policy=REMAT_POLICY)
+        x, aux = blk(p[f"layer_{i}"], x)
+        aux_total = aux_total + aux
+    return constrain(x, "batch", "seq", "embed"), aux_total
+
+
+# ----------------------------------------------------------------- stack apply ----
+
+def apply_stack(arch: ArchConfig, stacked: PyTree, x: jax.Array,
+                positions: jax.Array, causal: bool, mrope_positions=None,
+                enc_out=None) -> Tuple[jax.Array, jax.Array]:
+    body = functools.partial(apply_period, arch, positions=positions,
+                             causal=causal, mrope_positions=mrope_positions,
+                             enc_out=enc_out)
+
+    if isinstance(stacked, dict) and any(k.startswith("period_") for k in stacked):
+        aux_total = jnp.zeros((), jnp.float32)
+        for z in range(len(stacked)):
+            x, a = body(stacked[f"period_{z}"], x)
+            aux_total = aux_total + a
+        return x, aux_total
+
+    def scan_body(carry, period_params):
+        h, aux = carry
+        h, a = body(period_params, h)
+        return (h, aux + a), None
+    (x, aux), _ = jax.lax.scan(
+        scan_body, (x, jnp.zeros((), jnp.float32)), stacked)
+    return x, aux
+
+
+# ------------------------------------------------------------------ decode path ---
+
+def init_caches(arch: ArchConfig, batch: int, max_len: int, dtype) -> PyTree:
+    """Stacked per-period decode caches (incl. whisper cross-KV)."""
+    def one_period():
+        c: PyTree = {}
+        for i, (mixer, _) in enumerate(layer_kinds(arch)):
+            if mixer == "attn":
+                c[f"layer_{i}"] = attn_lib.init_kv_cache(arch, batch, max_len, dtype)
+                if arch.family == "encdec":
+                    hd = arch.resolved_head_dim
+                    c[f"layer_{i}"]["cross_k"] = jnp.zeros(
+                        (batch, arch.enc_seq_len, arch.num_kv_heads, hd), dtype)
+                    c[f"layer_{i}"]["cross_v"] = jnp.zeros(
+                        (batch, arch.enc_seq_len, arch.num_kv_heads, hd), dtype)
+            else:
+                c[f"layer_{i}"] = ssm_lib.init_mamba_cache(arch, batch, dtype)
+        return c
+    nper = arch.num_layers // period_length(arch)
+    per = one_period()
+    if arch.scan_layers and nper > 1:
+        return jax.tree.map(
+            lambda l: jnp.broadcast_to(l[None], (nper,) + l.shape).copy(), per)
+    return {f"period_{z}": one_period() for z in range(nper)}
+
+
+def decode_period(arch: ArchConfig, p: PyTree, cache: PyTree, x: jax.Array,
+                  positions: jax.Array, mrope_positions=None
+                  ) -> Tuple[jax.Array, PyTree]:
+    new_cache: PyTree = {}
+    for i, (mixer, _) in enumerate(layer_kinds(arch)):
+        x = constrain(x, "batch", None, None)
+        blk = p[f"layer_{i}"]
+        layer_cache = cache[f"layer_{i}"]
+        h = x if arch.post_norm else apply_norm(arch.norm, blk["ln1"], x)
+        if mixer == "attn":
+            kv_cache = {"k": layer_cache["k"], "v": layer_cache["v"]}
+            y, new_kv = attn_lib.extend_attention(arch, blk["attn"], h, kv_cache,
+                                                  positions, mrope_positions)
+            new_c = dict(layer_cache)
+            new_c.update(new_kv)
+        else:
+            y, new_c = ssm_lib.extend_mamba(arch, blk["mamba"], h, layer_cache)
+        new_cache[f"layer_{i}"] = new_c
+        x = apply_norm(arch.norm, blk["ln1"], x + y) if arch.post_norm else x + y
+
+        if "xattn" in blk:
+            h = apply_norm(arch.norm, blk["ln_x"], x)
+            enc_kv = (layer_cache["cross_k"], layer_cache["cross_v"])
+            x = x + attn_lib.apply_cross_attention(arch, blk["xattn"], h, enc_kv)
+
+        if arch.family != "ssm":
+            h = x if arch.post_norm else apply_norm(arch.norm, blk["ln2"], x)
+            if "moe" in blk:
+                y, _ = moe_lib.apply_moe(arch, blk["moe"], h)
+            else:
+                y = apply_mlp(arch.mlp, blk["mlp"], h)
+            x = apply_norm(arch.norm, blk["ln2"], x + y) if arch.post_norm else x + y
+    return x, new_cache
+
+
+def decode_stack(arch: ArchConfig, stacked: PyTree, caches: PyTree, x: jax.Array,
+                 positions: jax.Array, mrope_positions=None
+                 ) -> Tuple[jax.Array, PyTree]:
+    if isinstance(stacked, dict) and any(k.startswith("period_") for k in stacked):
+        new_caches: PyTree = {}
+        for z in range(len(stacked)):
+            x, nc = decode_period(arch, stacked[f"period_{z}"],
+                                  caches[f"period_{z}"], x, positions,
+                                  mrope_positions)
+            new_caches[f"period_{z}"] = nc
+        return x, new_caches
+
+    def scan_body(h, inputs):
+        period_params, cache = inputs
+        h, new_cache = decode_period(arch, period_params, cache, h,
+                                     positions, mrope_positions)
+        return h, new_cache
+    x, new_caches = jax.lax.scan(scan_body, x, (stacked, caches))
+    return x, new_caches

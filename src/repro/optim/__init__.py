@@ -1,0 +1,50 @@
+"""Optimizer registry."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+from . import adamw, grad, lamb, sgd, zero
+from ..configs.base import RunConfig
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    """Uniform facade: init(params) / update(grads, state, params)."""
+    name: str
+    cfg: Any
+
+    def init(self, params: PyTree) -> PyTree:
+        return _MODS[self.name].init(self.cfg, params)
+
+    def update(self, grads: PyTree, state: PyTree, params: PyTree
+               ) -> Tuple[PyTree, PyTree]:
+        return _MODS[self.name].update(self.cfg, grads, state, params)
+
+
+_MODS = {"lamb": lamb, "adamw": adamw, "sgd": sgd}
+
+
+def make_optimizer(run: RunConfig, pad_multiple: int = 256) -> Optimizer:
+    if run.optimizer == "lamb":
+        cfg = lamb.LambConfig(learning_rate=run.learning_rate,
+                              weight_decay=run.weight_decay, zero1=run.zero1,
+                              pad_multiple=pad_multiple,
+                              use_fused_kernel=run.fused_optimizer_kernel,
+                              master_weights=run.master_weights,
+                              state_dtype=run.opt_state_dtype)
+    elif run.optimizer == "adamw":
+        cfg = adamw.AdamWConfig(learning_rate=run.learning_rate,
+                                weight_decay=run.weight_decay, zero1=run.zero1,
+                                pad_multiple=pad_multiple)
+    elif run.optimizer == "sgd":
+        cfg = sgd.SGDConfig(learning_rate=run.learning_rate,
+                            weight_decay=run.weight_decay)
+    else:
+        raise ValueError(run.optimizer)
+    return Optimizer(run.optimizer, cfg)
+
+
+__all__ = ["Optimizer", "make_optimizer", "adamw", "grad", "lamb", "sgd", "zero"]

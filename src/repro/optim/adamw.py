@@ -1,0 +1,75 @@
+"""AdamW — the paper's Fig 13 fusion-comparison optimizer (Adam [+ decoupled decay]).
+
+Same state layout options as LAMB (param-shaped, or ZeRO-1 flat-sharded)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import zero
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    learning_rate: float = 1e-3
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    zero1: bool = True
+    pad_multiple: int = 256
+
+
+def init(cfg: AdamWConfig, params: PyTree) -> PyTree:
+    if cfg.zero1:
+        def zeros(p):
+            return jnp.zeros_like(zero.flatten_leaf(p, 0, cfg.pad_multiple))
+    else:
+        def zeros(p):
+            return jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def update(cfg: AdamWConfig, grads: PyTree, state: PyTree, params: PyTree
+           ) -> Tuple[PyTree, PyTree]:
+    with jax.named_scope("adamw"):
+        return _update(cfg, grads, state, params)
+
+
+def _update(cfg: AdamWConfig, grads: PyTree, state: PyTree, params: PyTree
+            ) -> Tuple[PyTree, PyTree]:
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 / (1.0 - jnp.power(cfg.beta1, t))
+    c2 = 1.0 / (1.0 - jnp.power(cfg.beta2, t))
+
+    def upd(w, g, m, v):
+        shape, dtype = w.shape, w.dtype
+        if cfg.zero1:
+            w32 = zero.flatten_leaf(w, 0, cfg.pad_multiple)
+            g32 = g if g.shape == m.shape else \
+                zero.flatten_leaf(g, 0, cfg.pad_multiple)
+        else:
+            w32 = w.astype(jnp.float32)
+            g32 = g.astype(jnp.float32)
+        m_new = cfg.beta1 * m + (1 - cfg.beta1) * g32
+        v_new = cfg.beta2 * v + (1 - cfg.beta2) * jnp.square(g32)
+        u = (m_new * c1) / (jnp.sqrt(v_new * c2) + cfg.eps)
+        w_new = w32 - cfg.learning_rate * (u + cfg.weight_decay * w32)
+        if cfg.zero1:
+            w_new = zero.unflatten_leaf(w_new, shape, 0, dtype)
+        else:
+            w_new = w_new.astype(dtype)
+        return w_new, m_new, v_new
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    pick = lambda i: jax.tree.map(lambda o: o[i], out,  # noqa: E731
+                                  is_leaf=lambda x: isinstance(x, tuple))
+    return pick(0), {"m": pick(1), "v": pick(2), "step": step}

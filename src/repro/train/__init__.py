@@ -1,0 +1,5 @@
+from .steps import StepBundle, build_prefill_step, build_serve_step, \
+    build_step, build_train_step
+
+__all__ = ["StepBundle", "build_step", "build_train_step",
+           "build_prefill_step", "build_serve_step"]

@@ -1,0 +1,108 @@
+"""Fault-tolerant training loop: checkpoint/restart, watchdog, straggler monitor.
+
+SPMD reality at 1000+ nodes: a straggling or hung worker stalls the whole step.
+The mitigations a framework can provide (DESIGN.md §7) are (a) detecting it —
+the per-step EWMA monitor flags steps >> the running mean, and the watchdog
+aborts the process on a hard deadline so the cluster scheduler can restart it;
+(b) making restarts cheap — frequent async checkpoints plus elastic restore
+(the checkpoint re-shards onto whatever mesh the restarted job gets).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from ..checkpoint import CheckpointManager
+from ..data import DataConfig, SyntheticPipeline
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    max_steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    keep: int = 3
+    log_every: int = 10
+    # watchdog: abort if a step exceeds this wall-time (0 = disabled)
+    step_deadline_s: float = 0.0
+    # straggler flagging: step > factor * EWMA
+    straggler_factor: float = 3.0
+    ewma_alpha: float = 0.1
+
+
+class StepMonitor:
+    """EWMA step-time tracker + hard-deadline watchdog."""
+
+    def __init__(self, cfg: LoopConfig, on_deadline: Callable[[], None]):
+        self.cfg = cfg
+        self.ewma: Optional[float] = None
+        self.stragglers = 0
+        self._deadline_timer: Optional[threading.Timer] = None
+        self._on_deadline = on_deadline
+
+    def step_started(self) -> None:
+        if self.cfg.step_deadline_s > 0:
+            self._deadline_timer = threading.Timer(
+                self.cfg.step_deadline_s, self._on_deadline)
+            self._deadline_timer.daemon = True
+            self._deadline_timer.start()
+
+    def step_finished(self, dt: float) -> bool:
+        """-> True if this step was a straggler."""
+        if self._deadline_timer is not None:
+            self._deadline_timer.cancel()
+            self._deadline_timer = None
+        straggler = (self.ewma is not None
+                     and dt > self.cfg.straggler_factor * self.ewma)
+        a = self.cfg.ewma_alpha
+        self.ewma = dt if self.ewma is None else (1 - a) * self.ewma + a * dt
+        if straggler:
+            self.stragglers += 1
+        return straggler
+
+
+def train_loop(step_fn: Callable, state: Any, data: SyntheticPipeline,
+               cfg: LoopConfig,
+               start_step: int = 0,
+               ckpt: Optional[CheckpointManager] = None,
+               log: Callable[[str], None] = print) -> Dict[str, Any]:
+    """Run (or resume) training; returns {"state", "history", "monitor"}."""
+    if ckpt is None and cfg.ckpt_dir:
+        ckpt = CheckpointManager(cfg.ckpt_dir, keep=cfg.keep)
+
+    def _abort():
+        log("[watchdog] step deadline exceeded — checkpointing impossible "
+            "mid-step; aborting for scheduler restart")
+        import os
+        os._exit(42)
+
+    monitor = StepMonitor(cfg, _abort)
+    history = []
+    it = data.iterator(start_step=start_step)
+    for step in range(start_step, cfg.max_steps):
+        batch = next(it)
+        monitor.step_started()
+        t0 = time.perf_counter()
+        state, metrics = step_fn(state, batch)
+        metrics = jax.tree.map(lambda x: float(np.asarray(x)), metrics)
+        dt = time.perf_counter() - t0
+        straggler = monitor.step_finished(dt)
+        history.append({"step": step, "dt": dt, **metrics})
+        if straggler:
+            log(f"[monitor] step {step} straggled: {dt:.3f}s vs EWMA "
+                f"{monitor.ewma:.3f}s")
+        if step % cfg.log_every == 0:
+            log(f"step {step:5d} loss={metrics.get('loss', float('nan')):.4f} "
+                f"acc={metrics.get('accuracy', 0.0):.3f} {dt*1e3:.0f}ms")
+        if ckpt and (step + 1) % cfg.ckpt_every == 0:
+            ckpt.save_async(step + 1, state,
+                            extra={"data_step": step + 1})
+    if ckpt:
+        ckpt.wait()
+        ckpt.save(cfg.max_steps, state, extra={"data_step": cfg.max_steps})
+    return {"state": state, "history": history, "monitor": monitor}

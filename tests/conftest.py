@@ -1,0 +1,9 @@
+import os
+
+# smoke tests and benches must see ONE device (the dry-run sets 512 itself,
+# in its own process); keep XLA quiet and deterministic
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_threefry_partitionable", True)

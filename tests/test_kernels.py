@@ -1,0 +1,69 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.bias_gelu import kernel as bg_kernel, ref as bg_ref
+from repro.kernels.fused_lamb import ops as lamb_ops, ref as lamb_ref
+from repro.kernels.fused_layernorm import kernel as ln_kernel, ref as ln_ref
+from repro.kernels.fused_softmax import kernel as sm_kernel, ref as sm_ref
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(256, 128), (512, 384), (1024, 1024)])
+@pytest.mark.parametrize("rms", [True, False])
+def test_layernorm_kernel_sweep(shape, dtype, rms):
+    x = jax.random.normal(jax.random.key(0), shape, dtype)
+    res = jax.random.normal(jax.random.key(1), shape, dtype)
+    scale = jnp.ones((shape[-1],)) * 1.1
+    bias = None if rms else jnp.full((shape[-1],), 0.05)
+    yk = ln_kernel.fused_residual_layernorm(x, res, scale, bias, rms=rms,
+                                            interpret=True)
+    yr = ln_ref.fused_residual_layernorm(x, res, scale, bias, rms=rms)
+    atol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(yk, np.float32),
+                               np.asarray(yr, np.float32), atol=atol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("with_bias", [True, False])
+def test_bias_gelu_kernel(dtype, with_bias):
+    x = jax.random.normal(jax.random.key(2), (512, 256), dtype)
+    b = jnp.linspace(-1, 1, 256).astype(dtype) if with_bias else None
+    yk = bg_kernel.bias_gelu(x, b, interpret=True)
+    yr = bg_ref.bias_gelu(x, b)
+    atol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(yk, np.float32),
+                               np.asarray(yr, np.float32), atol=atol)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("shape", [(4, 128, 128), (2, 256, 64)])
+def test_softmax_kernel(shape, causal):
+    s = jax.random.normal(jax.random.key(3), shape, jnp.float32)
+    yk = sm_kernel.scale_mask_softmax(s, scale=0.125, causal=causal,
+                                      interpret=True)
+    yr = sm_ref.scale_mask_softmax(s, scale=0.125, causal=causal)
+    np.testing.assert_allclose(yk, yr, atol=1e-6)
+    rows = np.asarray(yk.sum(-1))
+    np.testing.assert_allclose(rows, np.ones_like(rows), atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(rows=st.sampled_from([1, 3, 8]),
+       f=st.sampled_from([64, 256, 2048]),
+       seed=st.integers(0, 100))
+def test_lamb_kernel_property_sweep(rows, f, seed):
+    ks = jax.random.split(jax.random.key(seed), 4)
+    w = jax.random.normal(ks[0], (rows, f), jnp.float32)
+    g = jax.random.normal(ks[1], (rows, f), jnp.float32)
+    m = jax.random.normal(ks[2], (rows, f), jnp.float32) * 0.1
+    v = jnp.abs(jax.random.normal(ks[3], (rows, f))) * 0.01
+    kw = dict(ginv=0.3, c1=1.5, c2=1.2, beta1=0.9, beta2=0.999, eps=1e-6,
+              weight_decay=0.01, lr=3e-4)
+    outk = lamb_ops.lamb_stage12(w, g, m, v, interpret=True, **kw)
+    outr = lamb_ref.lamb_stage12(w, g, m, v, red_axes=(-1,), **kw)
+    for a, b in zip(outk, outr):
+        np.testing.assert_allclose(a, b, atol=2e-5, rtol=1e-4)

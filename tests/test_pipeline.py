@@ -1,0 +1,46 @@
+"""GPipe pipeline parallelism: 4-stage pipeline == sequential (8 host devices)."""
+import subprocess
+import sys
+from pathlib import Path
+
+from repro.parallel.pipeline import bubble_fraction
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def test_bubble_fraction():
+    assert bubble_fraction(4, 4) == 3 / 7
+    assert bubble_fraction(1, 8) == 0.0
+    assert bubble_fraction(4, 28) < 0.1
+
+
+def test_pipeline_matches_sequential_multidevice():
+    script = r"""
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+os.environ['JAX_PLATFORMS'] = 'cpu'
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.parallel.pipeline import pipeline_apply
+from repro.launch.mesh import make_mesh
+S, M, B, D = 4, 8, 16, 32
+mesh = make_mesh((S,), ("pipe",))
+ws = jax.random.normal(jax.random.key(0), (S, D, D)) * 0.3
+def stage_fn(w, x): return jnp.tanh(x @ w)
+def run(ws_local, x):
+    return pipeline_apply(stage_fn, ws_local[0], x, num_stages=S, num_micro=M)
+x = jax.random.normal(jax.random.key(1), (B, D))
+y = jax.jit(jax.shard_map(run, mesh=mesh, in_specs=(P("pipe"), P()),
+                          out_specs=P()))(ws, x)
+ref = x
+for s in range(S): ref = jnp.tanh(ref @ ws[s])
+err = float(jnp.max(jnp.abs(y - ref)))
+assert err < 1e-6, err
+print("PIPELINE_OK", err)
+"""
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, cwd=ROOT, timeout=400,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "HOME": "/root"})
+    assert r.returncode == 0, (r.stdout[-800:], r.stderr[-2500:])
+    assert "PIPELINE_OK" in r.stdout

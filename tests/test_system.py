@@ -1,0 +1,125 @@
+"""End-to-end behaviour + paper-claims regression (one assert per Takeaway)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core import analytical, distmodel
+from repro.core.roofline import MI100, MI100_FP32, V5E
+
+
+BERT = get_config("bert-large")
+
+
+def _shares(b, n, dev, db):
+    times = analytical.phase_times(BERT, b, n, dev=dev, dtype_bytes=db)
+    tot = sum(times.values())
+    gemm = sum(v for k, v in times.items()
+               if k in ("attn_linear", "attn_bgemm", "fc", "head")) / tot
+    return times, tot, gemm
+
+
+def test_takeaway_1_transformer_dominates():
+    times, tot, _ = _shares(32, 128, MI100_FP32, 4)
+    transformer = sum(v for k, v in times.items()
+                      if k not in ("lamb", "loss", "head"))
+    assert transformer / tot > 0.7
+
+
+def test_takeaway_2_lamb_second_and_grows_with_small_batch():
+    t32, tot32, _ = _shares(32, 128, MI100_FP32, 4)
+    t4, tot4, _ = _shares(4, 128, MI100_FP32, 4)
+    assert t4["lamb"] / tot4 > t32["lamb"] / tot32
+    assert t4["lamb"] / tot4 > 0.1
+
+
+def test_takeaway_3_lamb_share_rises_with_mixed_precision():
+    t32, tot32, _ = _shares(32, 128, MI100_FP32, 4)
+    tmp, totmp, _ = _shares(32, 128, MI100, 2)
+    assert tmp["lamb"] / totmp > t32["lamb"] / tot32
+
+
+def test_takeaway_4_fc_and_linear_dominate_transformer():
+    times, tot, gemm = _shares(32, 128, MI100_FP32, 4)
+    assert times["fc"] > times["attn_linear"] > times["attn_bgemm"]
+    assert gemm > 0.5
+
+
+def test_takeaway_5_nongemm_share_rises_with_reduced_precision():
+    _, _, g32 = _shares(32, 128, MI100_FP32, 4)
+    _, _, gmp = _shares(32, 128, MI100, 2)
+    assert (1 - gmp) > (1 - g32)
+
+
+def test_takeaway_6_no_matrix_vector_at_b1():
+    gs = analytical.transformer_gemms(BERT, 1, 128)
+    for g in gs:
+        assert g.m > 1 and g.n > 1, (g.name, g.m, g.n)
+
+
+def test_takeaway_7_attention_bgemms_memory_bound():
+    gs = {g.name: g for g in analytical.transformer_gemms(BERT, 32, 128)}
+    # ops/byte below the MI100 fp32 machine balance => memory-bound
+    balance = MI100_FP32.peak_flops / MI100_FP32.hbm_bw
+    assert gs["attn_score"].intensity(4) < balance
+    assert gs["fc1"].intensity(4) > balance
+
+
+def test_takeaway_8_lamb_reads_4x_model():
+    ops = analytical.nongemm_ops(BERT, 32, 128)
+    stage1 = next(e for e in ops if e.name == "lamb_stage1")
+    model_bytes = BERT.param_count() * 4
+    reads = 4 * model_bytes          # w, g, m, v
+    assert stage1.total_bytes >= reads
+    assert stage1.intensity < 1.0    # deeply memory-bound
+
+
+def test_takeaway_9_nongemm_is_30_40_pct_fp32():
+    _, _, gemm = _shares(32, 128, MI100_FP32, 4)
+    assert 0.1 < 1 - gemm < 0.45
+
+
+def test_takeaway_11_token_count_drives_lamb_share():
+    t_small, tot_small, _ = _shares(4, 128, MI100_FP32, 4)
+    t_big, tot_big, _ = _shares(32, 512, MI100_FP32, 4)
+    assert t_small["lamb"] / tot_small > 3 * (t_big["lamb"] / tot_big)
+
+
+def test_takeaway_13_gemm_share_rises_with_width():
+    def gemm_share(width):
+        arch = dataclasses.replace(BERT, d_model=width, d_ff=4 * width,
+                                   head_dim=width // 16)
+        times = analytical.phase_times(arch, 32, 128, dev=MI100_FP32,
+                                       dtype_bytes=4)
+        tot = sum(times.values())
+        return sum(v for k, v in times.items()
+                   if k in ("attn_linear", "attn_bgemm", "fc", "head")) / tot
+    assert gemm_share(4096) > gemm_share(1024) > gemm_share(768)
+
+
+def test_takeaway_14_dp_overlap_hides_comm():
+    profs = distmodel.figure12(BERT)
+    d1 = profs["D1 (DP64 B=16, overlap)"]
+    d2 = profs["D2 (DP64 B=16, no overlap)"]
+    s1 = profs["S1 (single, B=16)"]
+    assert d1.total < 1.1 * s1.total          # overlap ~ single-device profile
+    assert d2.comm_time > 5 * d1.comm_time    # exposed without overlap
+
+
+def test_takeaway_15_mp_lamb_shrinks_comm_grows():
+    profs = distmodel.figure12(BERT)
+    m1, m2 = profs["M1 (MP2, B=16)"], profs["M2 (MP8, B=64)"]
+    assert m2.breakdown()["lamb"] < m1.breakdown()["lamb"]
+    assert m2.comm_time > m1.comm_time
+    assert m2.comm_time / m2.total > 0.3      # paper: ~42% at MP8
+
+
+def test_training_learns_end_to_end():
+    from repro.launch.train import main
+    out = main(["--arch", "bert-large", "--smoke", "--batch", "8",
+                "--seq", "32", "--steps", "30"])
+    losses = [h["loss"] for h in out["history"]]
+    assert losses[-1] < losses[0]
+    assert all(jnp.isfinite(jnp.asarray(losses)))
