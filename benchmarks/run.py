@@ -6,10 +6,10 @@ import traceback
 
 def main() -> None:
     from . import (breakdown, distributed, fusion_gemm, fusion_kernels,
-                   gemm_table, nongemm_ai, roofline_table, sweeps)
+                   gemm_table, nongemm_ai, roofline_table, serving, sweeps)
     print("name,us_per_call,derived")
     for mod in (breakdown, gemm_table, nongemm_ai, sweeps, distributed,
-                fusion_kernels, fusion_gemm, roofline_table):
+                fusion_kernels, fusion_gemm, roofline_table, serving):
         try:
             mod.run()
         except Exception:  # noqa: BLE001 — a failing table must not hide others

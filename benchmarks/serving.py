@@ -1,0 +1,144 @@
+"""Serving throughput/latency: continuous batching vs the static engine.
+
+A Poisson arrival trace of requests with heterogeneous generation lengths is
+served by both engines at several request rates. The static engine groups
+arrivals into fixed batches and decodes each batch in lock-step until its
+*longest* member finishes — short requests burn decode steps producing tokens
+nobody asked for. The continuous engine recycles a finished slot into the
+next queued request immediately, so aggregate tokens/sec tracks useful work.
+
+    PYTHONPATH=src python -m benchmarks.serving [--arch llama3.2-3b]
+
+Emits ``name,us_per_call,derived`` CSV rows like the other benchmarks, plus a
+human-readable summary with p50/p99 inter-token latency.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.models import build_model
+from repro.serving import ContinuousEngine, Request, pages_needed
+
+from .common import emit
+
+PAGE_SIZE = 16
+
+
+def make_trace(n_requests, rate, *, prompt_len=32, gen_range=(8, 64), seed=0):
+    """Poisson arrivals (exponential inter-arrival at ``rate`` req/s) with
+    ragged generation lengths."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, n_requests)) \
+        if np.isfinite(rate) else np.zeros(n_requests)
+    prompts = rng.integers(5, 500, (n_requests, prompt_len))
+    gens = rng.integers(gen_range[0], gen_range[1] + 1, n_requests)
+    return [Request(uid=i, prompt=[int(t) for t in prompts[i]],
+                    max_new_tokens=int(gens[i]), arrival=float(arrivals[i]))
+            for i in range(n_requests)]
+
+
+def run_static(model, params, requests, batch_size):
+    """Fixed-batch baseline: arrivals grouped into batches of ``batch_size``;
+    each batch waits for its last arrival, prefills together, and decodes
+    until its longest generation finishes."""
+    arch = model.arch
+    prefill = jax.jit(model.prefill)
+    decode = jax.jit(model.decode_step, donate_argnums=(1,))
+    t0 = time.perf_counter()
+    token_times = {r.uid: [] for r in requests}
+    for start in range(0, len(requests), batch_size):
+        group = requests[start:start + batch_size]
+        b = len(group)
+        plen = len(group[0].prompt)
+        max_gen = max(r.max_new_tokens for r in group)
+        # the batch cannot start before its last member arrives
+        while time.perf_counter() - t0 < max(r.arrival for r in group):
+            time.sleep(1e-4)
+        caches = model.init_caches(None, b, plen + max_gen)
+        tokens_np = np.asarray([r.prompt for r in group], np.int32)
+        logits, caches = prefill(params, caches,
+                                 {"tokens": jnp.asarray(tokens_np)})
+        toks = jnp.argmax(logits[:, -1], axis=-1)
+        for i, r in enumerate(group):
+            token_times[r.uid].append(time.perf_counter() - t0)
+        for step in range(max_gen - 1):
+            db = {"tokens": toks[:, None],
+                  "positions": jnp.full((b,), plen + step, jnp.int32)}
+            logits, caches = decode(params, caches, db)
+            toks = jnp.argmax(logits[:, -1], axis=-1)
+            toks.block_until_ready()
+            now = time.perf_counter() - t0
+            for i, r in enumerate(group):
+                if step + 1 < r.max_new_tokens:   # useful token, not waste
+                    token_times[r.uid].append(now)
+    wall = time.perf_counter() - t0
+    return token_times, wall
+
+
+def run_continuous(model, params, requests, slots):
+    max_seq = max(len(r.prompt) + r.max_new_tokens for r in requests)
+    num_pages = slots * pages_needed(max_seq + 1, PAGE_SIZE) + 2
+    engine = ContinuousEngine(model, params, num_slots=slots,
+                              num_pages=num_pages, page_size=PAGE_SIZE,
+                              max_seq_len=max_seq + PAGE_SIZE)
+    t0 = time.perf_counter()
+    results = engine.run(requests)
+    wall = time.perf_counter() - t0
+    return {uid: r["token_times"] for uid, r in results.items()}, wall
+
+
+def summarize(token_times, wall):
+    all_tokens = sum(len(v) for v in token_times.values())
+    gaps = []
+    for times in token_times.values():
+        gaps.extend(np.diff(times))
+    gaps = np.asarray(gaps) if gaps else np.zeros(1)
+    return {"tok_s": all_tokens / wall,
+            "p50_ms": float(np.percentile(gaps, 50) * 1e3),
+            "p99_ms": float(np.percentile(gaps, 99) * 1e3)}
+
+
+def run(arch_name="llama3.2-3b", n_requests=16, slots=4,
+        rates=(4.0, 16.0, float("inf"))) -> None:
+    arch = smoke_config(arch_name)
+    model = build_model(arch)
+    params = model.init(jax.random.key(0))
+    params = jax.tree.map(lambda p: p.astype(jnp.dtype(arch.dtype)), params)
+
+    for rate in rates:
+        trace = make_trace(n_requests, rate)
+        tag = "inf" if np.isinf(rate) else f"{rate:g}"
+        st_times, st_wall = run_static(model, params, trace, slots)
+        st = summarize(st_times, st_wall)
+        ct_times, ct_wall = run_continuous(model, params, trace, slots)
+        ct = summarize(ct_times, ct_wall)
+        emit(f"serve_static_rate{tag}", st_wall * 1e6 / max(1, n_requests),
+             f"{st['tok_s']:.1f}tok/s_p50={st['p50_ms']:.1f}ms_"
+             f"p99={st['p99_ms']:.1f}ms")
+        emit(f"serve_continuous_rate{tag}", ct_wall * 1e6 / max(1, n_requests),
+             f"{ct['tok_s']:.1f}tok/s_p50={ct['p50_ms']:.1f}ms_"
+             f"p99={ct['p99_ms']:.1f}ms")
+        speedup = ct["tok_s"] / max(st["tok_s"], 1e-9)
+        print(f"[serving] rate={tag} req/s: static {st['tok_s']:.1f} tok/s "
+              f"vs continuous {ct['tok_s']:.1f} tok/s "
+              f"({speedup:.2f}x aggregate throughput)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(args.arch, args.requests, args.slots)
+
+
+if __name__ == "__main__":
+    main()

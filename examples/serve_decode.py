@@ -1,11 +1,18 @@
-"""Batched serving example: prefill + token-by-token decode with a KV cache.
+"""Serving example: the continuous-batching engine (paged KV cache) next to
+the original static-batch driver, on the same prompts.
 
     PYTHONPATH=src python examples/serve_decode.py [arch-id]
+
+Both runs print their generations — greedy decode makes them identical; the
+continuous engine admits each request separately and recycles slots/pages as
+sequences finish (see README §Serving engine).
 """
 import sys
 
 from repro.launch import serve
 
 arch = sys.argv[1] if len(sys.argv) > 1 else "qwen2-vl-2b"
-serve.main(["--arch", arch, "--smoke", "--batch", "4",
-            "--prompt-len", "32", "--gen-len", "16"])
+common = ["--arch", arch, "--smoke", "--batch", "4",
+          "--prompt-len", "32", "--gen-len", "16"]
+serve.main(common + ["--engine", "static"])
+serve.main(common + ["--engine", "continuous", "--page-size", "8"])

@@ -38,6 +38,8 @@ _BODY_RE = re.compile(r"body=%?([\w.\-]+)")
 _COND_RE = re.compile(r"condition=%?([\w.\-]+)")
 _OPNAME_RE = re.compile(r'op_name="([^"]*)"')
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_RE = re.compile(
+    r"(?:(\w+\[[\d,]*\](?:\{[^}]*\})?)\s+)?%?([\w.\-]+)")
 
 _EW_OPS = {
     "add", "subtract", "multiply", "divide", "power", "maximum", "minimum",
@@ -214,22 +216,21 @@ class Engine:
         return table
 
     def _operand_bytes(self, ins: Instr, table: Dict[str, str]) -> int:
-        m = re.match(rf"{re.escape(ins.op)}\(([^)]*)\)", ins.rest.strip())
-        if not m:
-            return 0
-        total = 0
-        for opnd in m.group(1).split(","):
-            opnd = opnd.strip().lstrip("%")
-            if opnd in table:
-                total += shape_bytes(table[opnd])
-        return total
+        return sum(shape_bytes(s) for s in
+                   self._operand_shapes(ins, table) if s)
 
     def _operand_shapes(self, ins: Instr, table: Dict[str, str]) -> List[str]:
         m = re.match(rf"{re.escape(ins.op)}\(([^)]*)\)", ins.rest.strip())
         if not m:
             return []
-        return [table.get(o.strip().lstrip("%"), "") for o in
-                m.group(1).split(",")]
+        # Operand lists come in two dialects: bare names ("%a.1, %b.2") and
+        # typed ("f32[64,128]{1,0} %a.1, ..."). A plain comma split breaks on
+        # the commas inside typed shapes, so tokenize instead; when the type
+        # is inline, use it directly rather than the name table.
+        shapes: List[str] = []
+        for typ, name in _OPERAND_RE.findall(m.group(1)):
+            shapes.append(typ if typ else table.get(name, ""))
+        return shapes
 
     # -- fusion body flops ----------------------------------------------------------
     def _fusion_flops(self, comp_name: str) -> float:

@@ -1,0 +1,106 @@
+"""Pallas TPU paged decode-attention (single query per sequence, GQA).
+
+The serving regime the paper's §3.2.3 measurements predict to be memory-bound:
+at decode the attention "B-GEMMs" degenerate to matrix-vector products, so
+runtime is the HBM read of the KV cache itself. With a *paged* cache the K/V
+rows of one sequence are scattered across fixed-size pages of a global pool;
+this kernel gathers them page-by-page through a scalar-prefetched page table,
+so the gather happens in the BlockSpec index_map (pipelined HBM->VMEM DMAs)
+instead of a materialized [B, L, H, D] gather in HBM.
+
+Layout: q [B, Hkv, G, D] (G = Hq/Hkv query heads per KV head); k/v pools
+[P, page_size, Hkv, D]; page_table [B, max_pages]; seq_lens [B]. Grid
+(B, Hkv, max_pages): the page loop is the innermost grid dim, carrying fp32
+online-softmax accumulators (acc, m, l) in VMEM scratch. Pages at or past
+seq_len are skipped with ``pl.when`` (their table entries point at the null
+page 0), so per-step work tracks the sequence's *actual* length, not max_len.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_decode_kernel(pt_ref, sl_ref, q_ref, k_ref, v_ref, o_ref,
+                         acc_ref, m_ref, l_ref, *, page_size, scale):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    sl = sl_ref[b]
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # skip pages wholly past the end of the sequence (covers inactive slots,
+    # sl == 0, whose rows stay zero after the final normalization)
+    @pl.when(j * page_size < sl)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale           # [G, D]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)             # [page, D]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [G, page]
+        cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) + j * page_size
+        s = jnp.where(cols < sl, s, NEG_INF)
+        m_prev = m_ref[...]                                   # [G, 1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(p, v)
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_decode_attention_fwd(q, k_pages, v_pages, page_table, seq_lens, *,
+                               interpret=False):
+    """q [B, Hq, D]; k/v_pages [P, page, Hkv, D]; page_table [B, max_pages];
+    seq_lens [B] -> [B, Hq, D]. Decode is forward-only: no VJP."""
+    b, hq, d = q.shape
+    _, page_size, hkv, _ = k_pages.shape
+    g = hq // hkv
+    assert hq == g * hkv, (hq, hkv)
+    max_pages = page_table.shape[1]
+    scale = 1.0 / (d ** 0.5)
+
+    qg = q.reshape(b, hkv, g, d)
+    pt = page_table.astype(jnp.int32)
+    sl = seq_lens.astype(jnp.int32)
+
+    kern = functools.partial(_paged_decode_kernel, page_size=page_size,
+                             scale=scale)
+    out = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(b, hkv, max_pages),
+            in_specs=[
+                pl.BlockSpec((1, 1, g, d), lambda bi, h, j, pt, sl: (bi, h, 0, 0)),
+                pl.BlockSpec((1, page_size, 1, d),
+                             lambda bi, h, j, pt, sl: (pt[bi, j], 0, h, 0)),
+                pl.BlockSpec((1, page_size, 1, d),
+                             lambda bi, h, j, pt, sl: (pt[bi, j], 0, h, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, g, d),
+                                   lambda bi, h, j, pt, sl: (bi, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g, d), jnp.float32),
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, 1), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        interpret=interpret,
+    )(pt, sl, qg, k_pages, v_pages)
+    return out.reshape(b, hq, d)

@@ -1,0 +1,27 @@
+"""Dispatch wrapper for paged decode-attention.
+
+The Pallas kernel lowers on TPU backends (and everywhere under
+``interpret=True``, which is how the parity tests run it); CPU serving and the
+dry-run fall back to the pure-JAX gather in ``ref.py`` — identical numerics to
+the static engine's dense decode path.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def supported() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def paged_decode_attention(q, k_pages, v_pages, page_table, seq_lens, *,
+                           interpret=False):
+    """q [B, Hq, D]; k/v_pages [P, page, Hkv, D]; page_table [B, max_pages];
+    seq_lens [B] -> [B, Hq, D]."""
+    if supported() or interpret:
+        from . import kernel
+        return kernel.paged_decode_attention_fwd(
+            q, k_pages, v_pages, page_table, seq_lens, interpret=interpret)
+    from . import ref
+    return ref.paged_decode_attention(q, k_pages, v_pages, page_table,
+                                      seq_lens)

@@ -1,0 +1,31 @@
+"""Oracle for the Pallas paged decode-attention kernel.
+
+Gathers K/V pages through the page table into the dense [B, L, Hkv, D] layout
+and delegates to ``naive_attention`` — the exact numerics of the static
+engine's decode path, so engine-parity tests compare like with like.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...models.attention import naive_attention
+
+
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, page_table: jax.Array,
+                           seq_lens: jax.Array) -> jax.Array:
+    """Single-query attention against a paged KV cache.
+
+    q [B, Hq, D]; k_pages/v_pages [P, page_size, Hkv, D];
+    page_table [B, max_pages] (physical page ids, 0 = null page);
+    seq_lens [B] = valid cache length per sequence (0 = inactive slot).
+    -> [B, Hq, D]
+    """
+    b, hq, d = q.shape
+    _, page_size, hkv, _ = k_pages.shape
+    k = k_pages[page_table].reshape(b, -1, hkv, d)
+    v = v_pages[page_table].reshape(b, -1, hkv, d)
+    o = naive_attention(q[:, None], k, v, causal=False,
+                        kv_len=seq_lens.astype(jnp.int32))
+    return o[:, 0]

@@ -1,6 +1,16 @@
-"""Batched serving driver: prefill a prompt batch, then decode tokens.
+"""Serving driver with two engines behind ``--engine {static,continuous}``.
 
-``python -m repro.launch.serve --arch llama3.2-3b --smoke --batch 4 --prompt-len 32``
+static      the original fixed-batch driver: one dense KV cache of
+            ``batch * (prompt_len + gen_len)`` rows, every request padded to
+            the worst case and decoded in lock-step.
+continuous  ``repro.serving.ContinuousEngine``: paged KV cache + scheduler —
+            requests are admitted/recycled mid-flight and live KV memory
+            tracks actual generated lengths.
+
+Both engines are greedy at ``--temperature 0`` and produce identical token
+ids for the same prompts (tested in tests/test_serving.py).
+
+``python -m repro.launch.serve --arch llama3.2-3b --smoke --engine continuous``
 """
 from __future__ import annotations
 
@@ -15,23 +25,7 @@ from ..configs import get_config, smoke_config
 from ..models import build_model
 
 
-def main(argv=None) -> dict:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama3.2-3b")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen-len", type=int, default=32)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
-
-    arch = smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    assert not arch.bidirectional, "encoder-only archs have no decode step"
-    model = build_model(arch)
-    params = model.init(jax.random.key(args.seed))
-    params = jax.tree.map(lambda p: p.astype(jnp.dtype(arch.dtype)), params)
-
+def _run_static(model, params, args, arch) -> dict:
     b, plen, glen = args.batch, args.prompt_len, args.gen_len
     max_len = plen + glen
     caches = model.init_caches(None, b, max_len)
@@ -70,12 +64,71 @@ def main(argv=None) -> dict:
     t_decode = time.perf_counter() - t0
 
     out = np.stack([np.asarray(t) for t in generated], axis=1)
-    print(f"[serve] {arch.name}: prefill {plen} tok x{b} in "
+    print(f"[serve/static] {arch.name}: prefill {plen} tok x{b} in "
           f"{t_prefill*1e3:.1f}ms | {glen} decode steps in "
           f"{t_decode*1e3:.1f}ms ({t_decode/max(glen-1,1)*1e3:.1f} ms/tok)")
-    print(f"[serve] sample generations (first 8 ids/row): "
+    print(f"[serve/static] sample generations (first 8 ids/row): "
           f"{out[:2, :8].tolist()}")
     return {"tokens": out, "t_prefill": t_prefill, "t_decode": t_decode}
+
+
+def _run_continuous(model, params, args, arch) -> dict:
+    from ..serving import ContinuousEngine, Request, pages_needed
+
+    b, plen, glen = args.batch, args.prompt_len, args.gen_len
+    assert args.temperature == 0, "continuous engine is greedy-only for now"
+    prompt = np.asarray(jax.random.randint(jax.random.key(1), (b, plen), 5,
+                                           arch.vocab_size))
+    max_seq = plen + glen
+    num_pages = args.num_pages or (
+        b * pages_needed(max_seq + 1, args.page_size) + 2)
+    engine = ContinuousEngine(model, params, num_slots=args.slots or b,
+                              num_pages=num_pages, page_size=args.page_size,
+                              max_seq_len=max_seq + args.page_size)
+    reqs = [Request(uid=i, prompt=[int(t) for t in prompt[i]],
+                    max_new_tokens=glen) for i in range(b)]
+    t0 = time.perf_counter()
+    results = engine.run(reqs)
+    wall = time.perf_counter() - t0
+    out = np.stack([np.asarray(results[i]["tokens"]) for i in range(b)])
+    total_tokens = out.size
+    print(f"[serve/continuous] {arch.name}: {b} requests x {glen} tokens in "
+          f"{wall*1e3:.1f}ms ({total_tokens/wall:.1f} tok/s, "
+          f"{engine.steps} decode steps, {engine.prefills} prefills)")
+    print(f"[serve/continuous] sample generations (first 8 ids/row): "
+          f"{out[:2, :8].tolist()}")
+    return {"tokens": out, "wall": wall, "steps": engine.steps,
+            "prefills": engine.prefills}
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--engine", choices=("static", "continuous"),
+                    default="static")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    # continuous-engine knobs
+    ap.add_argument("--slots", type=int, default=0,
+                    help="decode slots (default: --batch)")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="KV pool pages (default: sized to the request set)")
+    args = ap.parse_args(argv)
+
+    arch = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    assert not arch.bidirectional, "encoder-only archs have no decode step"
+    model = build_model(arch)
+    params = model.init(jax.random.key(args.seed))
+    params = jax.tree.map(lambda p: p.astype(jnp.dtype(arch.dtype)), params)
+
+    if args.engine == "continuous":
+        return _run_continuous(model, params, args, arch)
+    return _run_static(model, params, args, arch)
 
 
 if __name__ == "__main__":

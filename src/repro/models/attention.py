@@ -379,3 +379,43 @@ def decode_attention(arch: ArchConfig, p: PyTree, x: jax.Array,
                      mrope_positions=None) -> Tuple[jax.Array, PyTree]:
     """One-token decode. x [B,1,D]; positions [B] (current index into the cache)."""
     return extend_attention(arch, p, x, cache, positions, mrope_positions)
+
+
+# ------------------------------------------------------------- paged decode path --
+
+def init_paged_kv_cache(arch: ArchConfig, num_pages: int, page_size: int,
+                        dtype) -> PyTree:
+    """Global page pool for one attention layer. Page 0 is the null page:
+    never allocated to a sequence, it absorbs writes from inactive slots and
+    padded page-table entries."""
+    hd = arch.resolved_head_dim
+    shape = (num_pages, page_size, arch.num_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def paged_decode_attention_layer(arch: ArchConfig, p: PyTree, x: jax.Array,
+                                 cache: PyTree, page_table: jax.Array,
+                                 seq_lens: jax.Array,
+                                 mrope_positions=None
+                                 ) -> Tuple[jax.Array, PyTree]:
+    """One-token decode against a paged KV cache.
+
+    x [B,1,D]; cache k/v [P, page, Hkv, D]; page_table [B, max_pages];
+    seq_lens [B] = tokens already in the cache (the new token's position).
+    Inactive slots carry seq_len 0: their K/V lands in the null page and
+    their attention output is garbage the engine never reads.
+    """
+    b, s, _ = x.shape
+    assert s == 1, "paged path is single-query decode only"
+    page_size = cache["k"].shape[1]
+    q, k, v = qkv_project(arch, p, x)                        # [B,1,H*,D]
+    q, k = position_encode(arch, q, k, seq_lens[:, None], mrope_positions)
+    pids = page_table[jnp.arange(b), seq_lens // page_size]  # [B]
+    offs = seq_lens % page_size
+    new_k = cache["k"].at[pids, offs].set(k[:, 0])
+    new_v = cache["v"].at[pids, offs].set(v[:, 0])
+    from ..kernels.decode_attention import ops as pd_ops
+    o = pd_ops.paged_decode_attention(q[:, 0], new_k, new_v, page_table,
+                                      seq_lens + 1)
+    y = dense(o.reshape(b, 1, arch.q_dim), p["wo"], p.get("bo"))
+    return y, {"k": new_k, "v": new_v}

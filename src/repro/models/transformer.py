@@ -209,6 +209,94 @@ def init_caches(arch: ArchConfig, batch: int, max_len: int, dtype) -> PyTree:
     return {f"period_{z}": one_period() for z in range(nper)}
 
 
+def init_paged_caches(arch: ArchConfig, num_pages: int, page_size: int,
+                      dtype) -> PyTree:
+    """Per-attention-layer page pools, stacked like ``init_caches``.
+
+    Every layer shares one logical page table: a sequence's page ids index the
+    same slots of every layer's pool, so the allocator hands out ids once and
+    the whole stack follows (vLLM's layout). Attention-free mixers are not
+    supported on the paged path — the engine enforces attention-only archs.
+    """
+    kinds = layer_kinds(arch)
+    assert all(m == "attn" for m, _ in kinds), \
+        f"paged caches need attention-only stacks, got {kinds} ({arch.name})"
+    assert arch.family != "encdec", "paged path has no cross-attention cache"
+
+    def one_period():
+        return {f"layer_{i}": attn_lib.init_paged_kv_cache(
+            arch, num_pages, page_size, dtype) for i in range(len(kinds))}
+    nper = arch.num_layers // period_length(arch)
+    if arch.scan_layers and nper > 1:
+        per = one_period()
+        return jax.tree.map(
+            lambda l: jnp.broadcast_to(l[None], (nper,) + l.shape).copy(), per)
+    return {f"period_{z}": one_period() for z in range(nper)}
+
+
+def _decode_block_mix(arch: ArchConfig, blk: PyTree, x: jax.Array, mix_fn
+                      ) -> Tuple[jax.Array, PyTree]:
+    """Shared pre/post-norm residual wrapping of a decode mixer.
+    ``mix_fn(h) -> (y, new_cache)``."""
+    h = x if arch.post_norm else apply_norm(arch.norm, blk["ln1"], x)
+    y, new_c = mix_fn(h)
+    x = apply_norm(arch.norm, blk["ln1"], x + y) if arch.post_norm else x + y
+    return x, new_c
+
+
+def _decode_block_ffn(arch: ArchConfig, blk: PyTree, x: jax.Array) -> jax.Array:
+    """Shared MoE/MLP tail of a decode block (no-op for mamba2 blocks)."""
+    if arch.family == "ssm":
+        return x
+    h = x if arch.post_norm else apply_norm(arch.norm, blk["ln2"], x)
+    if "moe" in blk:
+        y, _ = moe_lib.apply_moe(arch, blk["moe"], h)
+    else:
+        y = apply_mlp(arch.mlp, blk["mlp"], h)
+    return apply_norm(arch.norm, blk["ln2"], x + y) if arch.post_norm else x + y
+
+
+def paged_decode_period(arch: ArchConfig, p: PyTree, cache: PyTree,
+                        x: jax.Array, page_table: jax.Array,
+                        seq_lens: jax.Array, mrope_positions=None
+                        ) -> Tuple[jax.Array, PyTree]:
+    new_cache: PyTree = {}
+    for i in range(period_length(arch)):
+        x = constrain(x, "batch", None, None)
+        blk = p[f"layer_{i}"]
+
+        def mix(h, blk=blk, i=i):
+            return attn_lib.paged_decode_attention_layer(
+                arch, blk["attn"], h, cache[f"layer_{i}"], page_table,
+                seq_lens, mrope_positions)
+        x, new_cache[f"layer_{i}"] = _decode_block_mix(arch, blk, x, mix)
+        x = _decode_block_ffn(arch, blk, x)
+    return x, new_cache
+
+
+def paged_decode_stack(arch: ArchConfig, stacked: PyTree, caches: PyTree,
+                       x: jax.Array, page_table: jax.Array,
+                       seq_lens: jax.Array, mrope_positions=None
+                       ) -> Tuple[jax.Array, PyTree]:
+    if isinstance(stacked, dict) and any(k.startswith("period_") for k in stacked):
+        new_caches: PyTree = {}
+        for z in range(len(stacked)):
+            x, nc = paged_decode_period(arch, stacked[f"period_{z}"],
+                                        caches[f"period_{z}"], x, page_table,
+                                        seq_lens, mrope_positions)
+            new_caches[f"period_{z}"] = nc
+        return x, new_caches
+
+    def scan_body(h, inputs):
+        period_params, cache = inputs
+        h, new_cache = paged_decode_period(arch, period_params, cache, h,
+                                           page_table, seq_lens,
+                                           mrope_positions)
+        return h, new_cache
+    x, new_caches = jax.lax.scan(scan_body, x, (stacked, caches))
+    return x, new_caches
+
+
 def decode_period(arch: ArchConfig, p: PyTree, cache: PyTree, x: jax.Array,
                   positions: jax.Array, mrope_positions=None
                   ) -> Tuple[jax.Array, PyTree]:
@@ -217,30 +305,24 @@ def decode_period(arch: ArchConfig, p: PyTree, cache: PyTree, x: jax.Array,
         x = constrain(x, "batch", None, None)
         blk = p[f"layer_{i}"]
         layer_cache = cache[f"layer_{i}"]
-        h = x if arch.post_norm else apply_norm(arch.norm, blk["ln1"], x)
-        if mixer == "attn":
-            kv_cache = {"k": layer_cache["k"], "v": layer_cache["v"]}
-            y, new_kv = attn_lib.extend_attention(arch, blk["attn"], h, kv_cache,
-                                                  positions, mrope_positions)
-            new_c = dict(layer_cache)
-            new_c.update(new_kv)
-        else:
-            y, new_c = ssm_lib.extend_mamba(arch, blk["mamba"], h, layer_cache)
-        new_cache[f"layer_{i}"] = new_c
-        x = apply_norm(arch.norm, blk["ln1"], x + y) if arch.post_norm else x + y
+
+        def mix(h, blk=blk, layer_cache=layer_cache, mixer=mixer):
+            if mixer == "attn":
+                kv_cache = {"k": layer_cache["k"], "v": layer_cache["v"]}
+                y, new_kv = attn_lib.extend_attention(
+                    arch, blk["attn"], h, kv_cache, positions, mrope_positions)
+                new_c = dict(layer_cache)
+                new_c.update(new_kv)
+                return y, new_c
+            return ssm_lib.extend_mamba(arch, blk["mamba"], h, layer_cache)
+        x, new_cache[f"layer_{i}"] = _decode_block_mix(arch, blk, x, mix)
 
         if "xattn" in blk:
             h = apply_norm(arch.norm, blk["ln_x"], x)
             enc_kv = (layer_cache["cross_k"], layer_cache["cross_v"])
             x = x + attn_lib.apply_cross_attention(arch, blk["xattn"], h, enc_kv)
 
-        if arch.family != "ssm":
-            h = x if arch.post_norm else apply_norm(arch.norm, blk["ln2"], x)
-            if "moe" in blk:
-                y, _ = moe_lib.apply_moe(arch, blk["moe"], h)
-            else:
-                y = apply_mlp(arch.mlp, blk["mlp"], h)
-            x = apply_norm(arch.norm, blk["ln2"], x + y) if arch.post_norm else x + y
+        x = _decode_block_ffn(arch, blk, x)
     return x, new_cache
 
 

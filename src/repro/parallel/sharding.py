@@ -33,6 +33,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+if hasattr(jax, "shard_map"):            # jax >= 0.6
+    shard_map = jax.shard_map
+else:                                    # jax 0.4.x: experimental namespace
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
 Rules = Dict[str, Optional[object]]
 
 _state = threading.local()
@@ -81,8 +86,12 @@ def activate(mesh: Mesh, rules: Rules):
     def _ctx():
         prev = getattr(_state, "ctx", None)
         _state.ctx = (mesh, rules)
+        # jax >= 0.6 also wants the mesh ambient for sharding-in-types;
+        # constrain() itself builds explicit NamedShardings, so older
+        # versions need no global state
+        set_mesh = getattr(jax, "set_mesh", contextlib.nullcontext)
         try:
-            with jax.set_mesh(mesh):
+            with set_mesh(mesh):
                 yield
         finally:
             _state.ctx = prev

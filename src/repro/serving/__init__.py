@@ -1,0 +1,15 @@
+"""Continuous-batching serving engine over a paged KV cache.
+
+- ``kv_cache``  : page-pool allocator + per-slot page-table/length state
+- ``scheduler`` : request queue, admission by free-page count, slot recycling,
+                  recompute-preemption on pool pressure
+- ``engine``    : ``ContinuousEngine`` — fixed-shape jitted prefill/decode
+                  steps driven by the scheduler, so requests join and leave
+                  mid-flight without recompilation
+"""
+from .engine import ContinuousEngine
+from .kv_cache import PageAllocator, PagedCacheState, pages_needed
+from .scheduler import Request, Scheduler, SequenceState
+
+__all__ = ["ContinuousEngine", "PageAllocator", "PagedCacheState",
+           "pages_needed", "Request", "Scheduler", "SequenceState"]

@@ -1,0 +1,212 @@
+"""ContinuousEngine: greedy serving with continuous batching.
+
+Shapes the compiler sees are fixed — decode always runs the full
+``num_slots`` batch against the same page pools and a [num_slots, max_pages]
+page table — so requests join and leave mid-flight without recompiling.
+Prefill runs per request (batch 1) at a page-aligned bucket length and its
+dense K/V rows are scattered into freshly allocated pages; only the handful
+of distinct bucket lengths ever trigger a compile.
+
+The engine is deliberately greedy-only: parity with the static engine
+(``repro.launch.serve --engine static``) must be exact, and greedy decode is
+what makes recompute-preemption lossless.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import transformer as tf
+from ..models.model import Model
+from .kv_cache import pages_needed
+from .scheduler import Request, Scheduler, SequenceState
+
+SERVABLE_FAMILIES = ("dense", "moe", "vlm")
+
+
+class ContinuousEngine:
+    def __init__(self, model: Model, params, *, num_slots: int = 8,
+                 num_pages: int = 256, page_size: int = 16,
+                 max_seq_len: int = 512):
+        arch = model.arch
+        assert arch.family in SERVABLE_FAMILIES, \
+            f"continuous engine serves attention-only LMs, not {arch.family}"
+        assert not arch.bidirectional and arch.num_heads > 0
+        assert arch.pos_emb in ("rope", "mrope"), \
+            "paged decode re-derives positions from seq_lens (rope/mrope only)"
+        assert arch.window == 0, \
+            "paged decode-attention has no sliding-window masking yet"
+        self.model = model
+        self.arch = arch
+        self.params = params
+        self.page_size = page_size
+        self.num_slots = num_slots
+        self.max_pages_per_seq = pages_needed(max_seq_len, page_size)
+        self.scheduler = Scheduler(num_slots=num_slots, num_pages=num_pages,
+                                   page_size=page_size,
+                                   max_pages_per_seq=self.max_pages_per_seq)
+        self.pools = tf.init_paged_caches(arch, num_pages, page_size,
+                                          jnp.dtype(arch.dtype))
+        self.steps = 0                  # decode steps executed (for stats)
+        self.prefills = 0
+        self._prefill_fns: Dict[int, object] = {}
+        self._scatter_fns: Dict[int, object] = {}
+        # donate the page pools through decode AND scatter: without it each
+        # call copies every layer's [P, page, Hkv, D] pool to update a few rows
+        self._donate_pools = jax.default_backend() in ("tpu", "gpu")
+        donate = (1,) if self._donate_pools else ()
+        self._decode = jax.jit(self._decode_impl, donate_argnums=donate)
+
+    # ------------------------------------------------------------- jitted fns ---
+    def _decode_impl(self, params, pools, page_table, seq_lens, tokens):
+        """tokens [S] -> (greedy next token [S], new pools). S == num_slots.
+
+        The argmax stays on device: the engine is greedy-only, so shipping
+        [S, vocab] logits to the host every step would be pure transfer waste.
+        """
+        x = self.model._embed(params, tokens[:, None])
+        x, pools = tf.paged_decode_stack(self.arch, params["blocks"], pools,
+                                         x, page_table, seq_lens)
+        logits = self.model._logits(params, x)[:, 0]
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), pools
+
+    def _prefill_fn(self, bucket: int):
+        fn = self._prefill_fns.get(bucket)
+        if fn is None:
+            def impl(params, caches, tokens, last_idx):
+                x = self.model._embed(params, tokens)
+                pos0 = jnp.zeros((1,), jnp.int32)
+                x, caches = tf.decode_stack(self.arch, params["blocks"],
+                                            caches, x, pos0)
+                xl = jax.lax.dynamic_slice_in_dim(x, last_idx, 1, axis=1)
+                return self.model._logits(params, xl), caches
+            fn = self._prefill_fns[bucket] = jax.jit(impl)
+        return fn
+
+    def _scatter_fn(self, n_pages: int):
+        fn = self._scatter_fns.get(n_pages)
+        if fn is None:
+            page = self.page_size
+
+            def impl(pools, caches, pids):
+                def leaf(pool, dense):
+                    if pool.ndim == 5:  # scanned stack: [nper, P, page, H, D]
+                        nper, _, _, hk, dh = pool.shape
+                        rows = dense.reshape(nper, n_pages, page, hk, dh)
+                        return pool.at[:, pids].set(rows)
+                    _, _, hk, dh = pool.shape
+                    rows = dense.reshape(n_pages, page, hk, dh)
+                    return pool.at[pids].set(rows)
+                return jax.tree.map(leaf, pools, caches)
+            donate = (0,) if self._donate_pools else ()
+            fn = self._scatter_fns[n_pages] = jax.jit(impl,
+                                                      donate_argnums=donate)
+        return fn
+
+    # --------------------------------------------------------------- prefill ----
+    def _prefill_seq(self, seq: SequenceState) -> int:
+        """Run prompt(+resumed tokens) prefill, scatter K/V into the
+        sequence's pages, and return the first greedy token."""
+        ctx = seq.context
+        n_pages = pages_needed(len(ctx), self.page_size)
+        bucket = n_pages * self.page_size
+        tokens = np.zeros((1, bucket), np.int32)
+        tokens[0, :len(ctx)] = ctx
+        dense_caches = self.model.init_caches(None, 1, bucket)
+        logits, dense_caches = self._prefill_fn(bucket)(
+            self.params, dense_caches, jnp.asarray(tokens),
+            jnp.int32(len(ctx) - 1))
+        pids = jnp.asarray(
+            self.scheduler.cache.page_table[seq.slot, :n_pages])
+        self.pools = self._scatter_fn(n_pages)(self.pools, dense_caches, pids)
+        self.prefills += 1
+        return int(np.argmax(np.asarray(logits[0, 0])))
+
+    # ------------------------------------------------------------------- run ----
+    def run(self, requests: Sequence[Request], *,
+            time_fn=time.perf_counter) -> Dict[int, dict]:
+        """Serve a trace to completion. Requests with ``arrival > 0`` are held
+        back until the trace clock reaches them. Returns
+        uid -> {"tokens", "token_times", "prompt_len"}."""
+        sched = self.scheduler
+        pending = deque(sorted(requests, key=lambda r: (r.arrival, r.uid)))
+        results: Dict[int, dict] = {}
+        t0 = time_fn()
+        skip = 0.0                      # simulated idle time (frozen time_fn)
+
+        def now() -> float:
+            return time_fn() - t0 + skip
+
+        def finish(seq: SequenceState) -> None:
+            sched.finish(seq)
+            results[seq.request.uid] = {
+                "tokens": list(seq.generated),
+                "token_times": list(seq.token_times),
+                "prompt_len": len(seq.request.prompt),
+            }
+
+        while pending or sched.has_work:
+            while pending and pending[0].arrival <= now():
+                sched.submit(pending.popleft())
+
+            # admit + prefill everything that fits right now. The prefill
+            # argmax is always a *new* token: the first generation for a
+            # fresh request, the continuation for a resumed preemption
+            # (whose regenerated context is re-prefilled in one shot).
+            while True:
+                seq = sched.admit_next()
+                if seq is None:
+                    break
+                seq.generated.append(self._prefill_seq(seq))
+                seq.token_times.append(now())
+                if seq.done:
+                    finish(seq)
+
+            if not sched.running:
+                if pending:
+                    wait = max(0.0, pending[0].arrival - now())
+                    before = now()
+                    time.sleep(min(1e-3, wait))
+                    if now() <= before:
+                        # injected clock that doesn't advance with real time:
+                        # fast-forward the trace instead of spinning forever
+                        skip += max(wait, 1e-9)
+                    continue
+                if sched.queue:
+                    raise RuntimeError(
+                        "queue stalled: page pool cannot admit any request")
+                break
+
+            sched.ensure_capacity()     # may preempt; victims re-enter later
+
+            slots = sched.running_slots()
+            if not slots:
+                continue
+            tokens = np.zeros((self.num_slots,), np.int32)
+            for slot in slots:
+                tokens[slot] = sched.running[slot].generated[-1]
+            cache = sched.cache
+            next_tokens, self.pools = self._decode(
+                self.params, self.pools, jnp.asarray(cache.page_table),
+                jnp.asarray(cache.seq_lens), jnp.asarray(tokens))
+            self.steps += 1
+            next_np = np.asarray(next_tokens)
+            t_tok = now()
+            for slot in slots:
+                seq = sched.running[slot]
+                cache.seq_lens[slot] += 1        # input token now cached
+                seq.generated.append(int(next_np[slot]))
+                seq.token_times.append(t_tok)
+                if seq.done:
+                    finish(seq)
+        return results
+
+    # ----------------------------------------------------------------- stats ----
+    @property
+    def live_kv_tokens(self) -> int:
+        return self.scheduler.cache.live_tokens

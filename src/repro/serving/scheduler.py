@@ -1,0 +1,158 @@
+"""Continuous-batching scheduler: admission, slot recycling, preemption.
+
+Pure host logic (no jax): the engine asks the scheduler *what* to run each
+step; the scheduler owns the request queue, the fixed pool of decode slots,
+and the page allocator.
+
+Policies
+--------
+admission   FIFO; a queued request is admitted when a slot is free AND the
+            allocator can hand over the pages for its prompt plus one decode
+            token. Memory is committed page-by-page afterwards, so admission
+            tracks *actual* lengths, not worst-case ``max_len``.
+growth      crossing a page boundary mid-decode allocates one page. If the
+            pool is exhausted, the most recently admitted sequence is
+            preempted (recompute-style: its pages are freed and it rejoins
+            the front of the queue carrying the tokens generated so far —
+            greedy decode regenerates the identical continuation).
+recycling   EOS / max-new-tokens frees the slot and its pages in O(1); the
+            next queued request takes the slot without touching the compiled
+            decode step (fixed batch, inactive slots masked by seq_len 0).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence
+
+from .kv_cache import PageAllocator, PagedCacheState, pages_needed
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]                   # token ids
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    arrival: float = 0.0                # seconds into the trace
+
+
+@dataclasses.dataclass
+class SequenceState:
+    request: Request
+    slot: int
+    admit_order: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+    token_times: List[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def context(self) -> List[int]:
+        """Tokens whose K/V must be in cache: prompt + generated so far."""
+        return list(self.request.prompt) + self.generated
+
+    @property
+    def done(self) -> bool:
+        if len(self.generated) >= self.request.max_new_tokens:
+            return True
+        eos = self.request.eos_id
+        return eos is not None and len(self.generated) > 0 \
+            and self.generated[-1] == eos
+
+
+class Scheduler:
+    def __init__(self, *, num_slots: int, num_pages: int, page_size: int,
+                 max_pages_per_seq: int):
+        self.allocator = PageAllocator(num_pages)
+        self.cache = PagedCacheState(num_slots, max_pages_per_seq, page_size)
+        self.page_size = page_size
+        self.queue: Deque[Request] = deque()
+        self.running: Dict[int, SequenceState] = {}     # slot -> seq
+        self._free_slots: List[int] = list(range(num_slots - 1, -1, -1))
+        # uid -> (generated, token_times) carried across a preemption
+        self._partial: Dict[int, tuple] = {}
+        self._admit_counter = 0
+
+    # ------------------------------------------------------------- submission ---
+    def submit(self, request: Request) -> None:
+        self.queue.append(request)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or bool(self.running)
+
+    # -------------------------------------------------------------- admission ---
+    def admit_next(self) -> Optional[SequenceState]:
+        """Admit the head-of-queue request if a slot and pages are available.
+
+        Allocates pages for the full current context (prompt + any tokens a
+        preempted sequence already generated) plus one decode token. Returns
+        the SequenceState (prefill still owed by the engine) or None.
+        """
+        if not self.queue or not self._free_slots:
+            return None
+        req = self.queue[0]
+        partial = self._partial.get(req.uid, ([], []))
+        ctx_len = len(req.prompt) + len(partial[0])
+        n_pages = pages_needed(ctx_len + 1, self.page_size)
+        if n_pages > self.cache.max_pages_per_seq:
+            raise ValueError(
+                f"request {req.uid}: context {ctx_len} exceeds "
+                f"max_pages_per_seq={self.cache.max_pages_per_seq}")
+        pages = self.allocator.alloc(n_pages)
+        if pages is None:
+            return None
+        self.queue.popleft()
+        self._partial.pop(req.uid, None)
+        slot = self._free_slots.pop()
+        seq = SequenceState(req, slot, self._admit_counter,
+                            generated=partial[0], token_times=partial[1])
+        self._admit_counter += 1
+        self.cache.assign(slot, pages, ctx_len)
+        self.running[slot] = seq
+        return seq
+
+    # ----------------------------------------------------------------- growth ---
+    def ensure_capacity(self) -> List[SequenceState]:
+        """Allocate next-token pages for every running sequence, preempting
+        (LIFO by admission) when the pool runs dry. Returns preempted seqs."""
+        preempted: List[SequenceState] = []
+        for slot in sorted(self.running):
+            while self.cache.needs_page(slot):
+                if slot not in self.running:
+                    break               # preempted below while we iterated
+                pages = self.allocator.alloc(1)
+                if pages is not None:
+                    self.cache.append_page(slot, pages[0])
+                    continue
+                victim = self._latest_running(exclude=slot)
+                if victim is None:
+                    raise RuntimeError(
+                        "page pool too small for a single sequence: "
+                        f"slot {slot} len {int(self.cache.seq_lens[slot])}")
+                self._preempt(victim)
+                preempted.append(victim)
+        return preempted
+
+    def _latest_running(self, exclude: int) -> Optional[SequenceState]:
+        cands = [s for s in self.running.values() if s.slot != exclude]
+        return max(cands, key=lambda s: s.admit_order) if cands else None
+
+    def _preempt(self, seq: SequenceState) -> None:
+        """Free the sequence's memory and put it back at the front of the
+        queue; its generated-so-far tokens are kept and re-prefilled on
+        re-admission (recompute preemption)."""
+        self.allocator.free(self.cache.release(seq.slot))
+        del self.running[seq.slot]
+        self._free_slots.append(seq.slot)
+        self._partial[seq.request.uid] = (seq.generated, seq.token_times)
+        self.queue.appendleft(seq.request)
+
+    # -------------------------------------------------------------- completion --
+    def finish(self, seq: SequenceState) -> None:
+        self.allocator.free(self.cache.release(seq.slot))
+        del self.running[seq.slot]
+        self._free_slots.append(seq.slot)
+
+    # ------------------------------------------------------------------ views ---
+    def running_slots(self) -> Sequence[int]:
+        return sorted(self.running)

@@ -4,7 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev dep (requirements-dev.txt)
+    given = settings = st = None
 
 from repro.models import attention as A
 from repro.models.layers import apply_mrope, apply_rope
@@ -38,22 +42,26 @@ def test_chunked_matches_naive_fwd_bwd(causal, window):
         np.testing.assert_allclose(a, b, atol=5e-5)
 
 
-@settings(max_examples=12, deadline=None)
-@given(
-    b=st.integers(1, 3),
-    hkv=st.sampled_from([1, 2, 4]),
-    g=st.sampled_from([1, 2, 3]),
-    d=st.sampled_from([8, 16]),
-    chunk=st.sampled_from([8, 16, 32]),
-    causal=st.booleans(),
-)
-def test_chunked_property_sweep(b, hkv, g, d, chunk, causal):
-    """Hypothesis sweep over GQA shapes/chunks: chunked == naive."""
-    sq = sk = 32
-    q, k, v = _qkv(jax.random.key(b * 7 + d), b, sq, sk, hkv * g, hkv, d)
-    o1 = A.naive_attention(q, k, v, causal=causal)
-    o2 = A.chunked_attention(q, k, v, causal=causal, chunk=chunk)
-    np.testing.assert_allclose(o1, o2, atol=3e-5)
+if st is not None:
+    @settings(max_examples=12, deadline=None)
+    @given(
+        b=st.integers(1, 3),
+        hkv=st.sampled_from([1, 2, 4]),
+        g=st.sampled_from([1, 2, 3]),
+        d=st.sampled_from([8, 16]),
+        chunk=st.sampled_from([8, 16, 32]),
+        causal=st.booleans(),
+    )
+    def test_chunked_property_sweep(b, hkv, g, d, chunk, causal):
+        """Hypothesis sweep over GQA shapes/chunks: chunked == naive."""
+        sq = sk = 32
+        q, k, v = _qkv(jax.random.key(b * 7 + d), b, sq, sk, hkv * g, hkv, d)
+        o1 = A.naive_attention(q, k, v, causal=causal)
+        o2 = A.chunked_attention(q, k, v, causal=causal, chunk=chunk)
+        np.testing.assert_allclose(o1, o2, atol=3e-5)
+else:
+    def test_chunked_property_sweep():
+        pytest.importorskip("hypothesis")
 
 
 def test_kv_len_masking():

@@ -6,6 +6,7 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.checkpoint import CheckpointManager
 
@@ -47,6 +48,7 @@ def test_no_partial_checkpoints(tmp_path):
     assert mgr.latest_step() is None
 
 
+@pytest.mark.slow
 def test_kill_and_resume_continuity(tmp_path):
     """Fault tolerance end-to-end: train 40 steps with ckpt_every=20, kill,
     restart — the resumed run continues from step 40's checkpoint and the

@@ -41,6 +41,7 @@ os.environ['JAX_PLATFORMS'] = 'cpu'
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.parallel import collectives as C
+from repro.parallel.sharding import shard_map
 from repro.launch.mesh import make_mesh
 
 mesh = make_mesh((2, 4), ("pod", "data"))
@@ -54,7 +55,7 @@ def f(g):
     h = C.hierarchical_psum(local, "data", "pod")
     return y, err, h
 
-y, err, h = jax.jit(jax.shard_map(
+y, err, h = jax.jit(shard_map(
     f, mesh=mesh, in_specs=(P(),),
     out_specs=(P(("pod", "data")), P(("pod", "data")), P(("pod", "data")))))(x)
 # compressed mean over data within pod 0: mean(1..4)*x = 2.5x

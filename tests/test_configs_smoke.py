@@ -21,7 +21,15 @@ def _batch(arch, b=2, s=32):
     return batch
 
 
-@pytest.mark.parametrize("name", sorted(REGISTRY))
+# the scan/remat train-step compiles take tens of seconds for the deep or
+# multi-component archs; keep a fast representative subset in tier-1
+_HEAVY = {"jamba-v0.1-52b", "bert-large", "llama4-maverick-400b-a17b",
+          "whisper-base"}
+
+
+@pytest.mark.parametrize(
+    "name", [pytest.param(n, marks=pytest.mark.slow) if n in _HEAVY else n
+             for n in sorted(REGISTRY)])
 def test_forward_and_train_step(name):
     arch = smoke_config(name)
     model = build_model(arch)

@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev dep (requirements-dev.txt)
+    given = settings = st = None
 
 from repro.kernels.bias_gelu import kernel as bg_kernel, ref as bg_ref
 from repro.kernels.fused_lamb import ops as lamb_ops, ref as lamb_ref
@@ -51,19 +55,23 @@ def test_softmax_kernel(shape, causal):
     np.testing.assert_allclose(rows, np.ones_like(rows), atol=1e-5)
 
 
-@settings(max_examples=8, deadline=None)
-@given(rows=st.sampled_from([1, 3, 8]),
-       f=st.sampled_from([64, 256, 2048]),
-       seed=st.integers(0, 100))
-def test_lamb_kernel_property_sweep(rows, f, seed):
-    ks = jax.random.split(jax.random.key(seed), 4)
-    w = jax.random.normal(ks[0], (rows, f), jnp.float32)
-    g = jax.random.normal(ks[1], (rows, f), jnp.float32)
-    m = jax.random.normal(ks[2], (rows, f), jnp.float32) * 0.1
-    v = jnp.abs(jax.random.normal(ks[3], (rows, f))) * 0.01
-    kw = dict(ginv=0.3, c1=1.5, c2=1.2, beta1=0.9, beta2=0.999, eps=1e-6,
-              weight_decay=0.01, lr=3e-4)
-    outk = lamb_ops.lamb_stage12(w, g, m, v, interpret=True, **kw)
-    outr = lamb_ref.lamb_stage12(w, g, m, v, red_axes=(-1,), **kw)
-    for a, b in zip(outk, outr):
-        np.testing.assert_allclose(a, b, atol=2e-5, rtol=1e-4)
+if st is not None:
+    @settings(max_examples=8, deadline=None)
+    @given(rows=st.sampled_from([1, 3, 8]),
+           f=st.sampled_from([64, 256, 2048]),
+           seed=st.integers(0, 100))
+    def test_lamb_kernel_property_sweep(rows, f, seed):
+        ks = jax.random.split(jax.random.key(seed), 4)
+        w = jax.random.normal(ks[0], (rows, f), jnp.float32)
+        g = jax.random.normal(ks[1], (rows, f), jnp.float32)
+        m = jax.random.normal(ks[2], (rows, f), jnp.float32) * 0.1
+        v = jnp.abs(jax.random.normal(ks[3], (rows, f))) * 0.01
+        kw = dict(ginv=0.3, c1=1.5, c2=1.2, beta1=0.9, beta2=0.999, eps=1e-6,
+                  weight_decay=0.01, lr=3e-4)
+        outk = lamb_ops.lamb_stage12(w, g, m, v, interpret=True, **kw)
+        outr = lamb_ref.lamb_stage12(w, g, m, v, red_axes=(-1,), **kw)
+        for a, b in zip(outk, outr):
+            np.testing.assert_allclose(a, b, atol=2e-5, rtol=1e-4)
+else:
+    def test_lamb_kernel_property_sweep():
+        pytest.importorskip("hypothesis")

@@ -22,6 +22,7 @@ os.environ['JAX_PLATFORMS'] = 'cpu'
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.parallel.pipeline import pipeline_apply
+from repro.parallel.sharding import shard_map
 from repro.launch.mesh import make_mesh
 S, M, B, D = 4, 8, 16, 32
 mesh = make_mesh((S,), ("pipe",))
@@ -30,8 +31,8 @@ def stage_fn(w, x): return jnp.tanh(x @ w)
 def run(ws_local, x):
     return pipeline_apply(stage_fn, ws_local[0], x, num_stages=S, num_micro=M)
 x = jax.random.normal(jax.random.key(1), (B, D))
-y = jax.jit(jax.shard_map(run, mesh=mesh, in_specs=(P("pipe"), P()),
-                          out_specs=P()))(ws, x)
+y = jax.jit(shard_map(run, mesh=mesh, in_specs=(P("pipe"), P()),
+                      out_specs=P()))(ws, x)
 ref = x
 for s in range(S): ref = jnp.tanh(ref @ ws[s])
 err = float(jnp.max(jnp.abs(y - ref)))

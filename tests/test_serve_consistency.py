@@ -13,7 +13,10 @@ ARCHS = ["llama3.2-3b", "mamba2-1.3b", "jamba-v0.1-52b", "deepseek-moe-16b",
          "whisper-base", "qwen2-vl-2b"]
 
 
-@pytest.mark.parametrize("name", ARCHS)
+@pytest.mark.parametrize(
+    "name", [pytest.param(n, marks=pytest.mark.slow)
+             if n in ("jamba-v0.1-52b", "whisper-base") else n
+             for n in ARCHS])
 def test_prefill_decode_match_forward(name):
     arch = smoke_config(name)
     if arch.moe is not None:  # avoid capacity-drop divergence (tested in moe)

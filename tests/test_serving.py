@@ -1,0 +1,201 @@
+"""Continuous-batching engine: allocator invariants, scheduler recycling,
+and exact greedy parity with the static engine."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import build_model
+from repro.serving import (ContinuousEngine, PageAllocator, Request,
+                           Scheduler, pages_needed)
+from repro.serving.kv_cache import NULL_PAGE
+
+
+# ------------------------------------------------------------------ allocator ----
+
+def test_allocator_alloc_free_roundtrip():
+    a = PageAllocator(8)                       # pages 1..7 usable
+    assert a.free_count == 7
+    pages = a.alloc(3)
+    assert len(set(pages)) == 3 and NULL_PAGE not in pages
+    assert a.free_count == 4 and a.used_count == 3
+    a.free(pages)
+    assert a.free_count == 7 and a.used_count == 0
+
+
+def test_allocator_never_double_allocates():
+    a = PageAllocator(16)
+    seen = set()
+    held = []
+    for _ in range(5):
+        pages = a.alloc(3)
+        assert not (seen & set(pages)), "page handed out twice while held"
+        seen |= set(pages)
+        held.append(pages)
+    a.free(held.pop())
+    more = a.alloc(3)                          # recycled ids are fine...
+    assert not (set(more) & set().union(*held))  # ...but never held twice
+
+
+def test_allocator_oom_refusal_is_all_or_nothing():
+    a = PageAllocator(4)                       # 3 usable pages
+    assert a.alloc(4) is None
+    assert a.free_count == 3                   # refused alloc took nothing
+    pages = a.alloc(3)
+    assert pages is not None and a.alloc(1) is None
+    a.free(pages)
+
+
+def test_allocator_rejects_double_free_and_null_page():
+    a = PageAllocator(8)
+    pages = a.alloc(2)
+    a.free(pages)
+    with pytest.raises(ValueError):
+        a.free(pages)
+    with pytest.raises(ValueError):
+        a.free([NULL_PAGE])
+
+
+def test_pages_needed():
+    assert pages_needed(1, 16) == 1
+    assert pages_needed(16, 16) == 1
+    assert pages_needed(17, 16) == 2
+
+
+# ------------------------------------------------------------------ scheduler ----
+
+def _req(uid, plen=8, gen=4):
+    return Request(uid=uid, prompt=list(range(5, 5 + plen)),
+                   max_new_tokens=gen)
+
+
+def test_scheduler_admission_by_free_pages():
+    # 4 usable pages, page_size 4: an 8-token prompt needs 3 pages (ctx+1)
+    s = Scheduler(num_slots=4, num_pages=5, page_size=4, max_pages_per_seq=8)
+    s.submit(_req(0))
+    s.submit(_req(1))
+    seq = s.admit_next()
+    assert seq is not None and seq.request.uid == 0
+    assert s.admit_next() is None              # 1 free page < 3 needed
+    s.finish(seq)
+    assert s.admit_next().request.uid == 1     # pages recycled -> admitted
+
+
+def test_scheduler_slot_recycling():
+    s = Scheduler(num_slots=2, num_pages=64, page_size=4, max_pages_per_seq=8)
+    for uid in range(4):
+        s.submit(_req(uid))
+    a, b = s.admit_next(), s.admit_next()
+    assert {a.slot, b.slot} == {0, 1}
+    assert s.admit_next() is None              # both slots busy
+    s.finish(a)
+    c = s.admit_next()
+    assert c.slot == a.slot                    # freed slot reused
+    assert s.cache.seq_lens[c.slot] == len(c.request.prompt)
+    s.finish(b), s.finish(c)
+    d = s.admit_next()
+    assert d is not None and not s.queue
+    s.finish(d)
+    assert s.allocator.used_count == 0         # everything returned
+
+
+def test_scheduler_page_growth_and_preemption():
+    # one page of headroom: growing the older sequence must preempt the newer
+    s = Scheduler(num_slots=2, num_pages=7, page_size=4, max_pages_per_seq=8)
+    s.submit(_req(0, plen=8, gen=16))          # 3 pages
+    s.submit(_req(1, plen=8, gen=16))          # 3 pages
+    s0, s1 = s.admit_next(), s.admit_next()
+    assert s.allocator.free_count == 0
+    s.cache.seq_lens[s0.slot] = 12             # slot 0 full: next token -> page 4
+    preempted = s.ensure_capacity()
+    assert [p.request.uid for p in preempted] == [1]
+    assert s.queue[0].uid == 1                 # requeued at the front
+    assert s.cache.allocated_pages(s0.slot) == 4
+
+
+# ------------------------------------------------------------------ e2e parity ---
+
+def _fp32_model(name):
+    arch = smoke_config(name)
+    arch = dataclasses.replace(arch, dtype="float32", param_dtype="float32")
+    model = build_model(arch)
+    params = model.init(jax.random.key(0))
+    return arch, model, params
+
+
+def _static_greedy(model, params, prompts, gens):
+    """Per-request static decode (batch 1): the reference token stream."""
+    out = []
+    prefill = jax.jit(model.prefill)
+    decode = jax.jit(model.decode_step)
+    for i, prompt in enumerate(prompts):
+        plen, glen = len(prompt), gens[i]
+        caches = model.init_caches(None, 1, plen + glen)
+        logits, caches = prefill(params, caches,
+                                 {"tokens": jnp.asarray([prompt])})
+        tok = jnp.argmax(logits[:, -1], axis=-1)
+        ids = [int(tok[0])]
+        for s in range(glen - 1):
+            logits, caches = decode(
+                params, caches,
+                {"tokens": tok[:, None],
+                 "positions": jnp.full((1,), plen + s, jnp.int32)})
+            tok = jnp.argmax(logits[:, -1], axis=-1)
+            ids.append(int(tok[0]))
+        out.append(ids)
+    return out
+
+
+@pytest.mark.parametrize("name", ["llama3.2-3b", "qwen2-vl-2b"])
+def test_continuous_matches_static_greedy(name):
+    arch, model, params = _fp32_model(name)
+    rng = np.random.default_rng(3)
+    prompts = [list(map(int, rng.integers(5, arch.vocab_size, rng.integers(6, 14))))
+               for _ in range(4)]
+    gens = [6, 11, 4, 9]                       # ragged generation lengths
+    ref = _static_greedy(model, params, prompts, gens)
+
+    engine = ContinuousEngine(model, params, num_slots=4, num_pages=48,
+                              page_size=8, max_seq_len=64)
+    res = engine.run([Request(uid=i, prompt=prompts[i], max_new_tokens=gens[i])
+                      for i in range(4)])
+    for i in range(4):
+        assert res[i]["tokens"] == ref[i], f"request {i} diverged"
+    assert engine.live_kv_tokens == 0          # all pages recycled
+
+
+def test_continuous_matches_static_under_recycling_and_preemption():
+    """slots < requests and a page pool too small for all of them: recycling
+    and recompute-preemption must not change a single greedy token."""
+    arch, model, params = _fp32_model("llama3.2-3b")
+    rng = np.random.default_rng(7)
+    prompts = [list(map(int, rng.integers(5, arch.vocab_size, 12)))
+               for _ in range(5)]
+    gens = [4, 16, 7, 12, 9]
+    ref = _static_greedy(model, params, prompts, gens)
+
+    engine = ContinuousEngine(model, params, num_slots=2, num_pages=10,
+                              page_size=4, max_seq_len=32)
+    res = engine.run([Request(uid=i, prompt=prompts[i], max_new_tokens=gens[i])
+                      for i in range(5)])
+    for i in range(5):
+        assert res[i]["tokens"] == ref[i], f"request {i} diverged"
+    assert engine.prefills > 5                 # preemption actually happened
+    assert engine.scheduler.allocator.used_count == 0
+
+
+def test_eos_stops_generation_early():
+    arch, model, params = _fp32_model("llama3.2-3b")
+    prompt = list(range(5, 15))
+    ref = _static_greedy(model, params, [prompt], [12])[0]
+    eos = ref[3]                               # force an early stop
+    stop = ref.index(eos) + 1                  # first occurrence wins
+    engine = ContinuousEngine(model, params, num_slots=2, num_pages=32,
+                              page_size=8, max_seq_len=64)
+    res = engine.run([Request(uid=0, prompt=prompt, max_new_tokens=12,
+                              eos_id=eos)])
+    assert res[0]["tokens"] == ref[:stop]
+    assert engine.live_kv_tokens == 0

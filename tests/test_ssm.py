@@ -2,7 +2,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev dep (requirements-dev.txt)
+    given = settings = st = None
 
 from repro.models import ssm
 
@@ -51,17 +56,21 @@ def test_ssd_chunked_matches_sequential():
         np.testing.assert_allclose(s_f, s_ref, atol=2e-4)
 
 
-@settings(max_examples=10, deadline=None)
-@given(h=st.sampled_from([2, 4]), g=st.sampled_from([1, 2]),
-       n=st.sampled_from([4, 16]), chunk=st.sampled_from([4, 8, 16]),
-       seed=st.integers(0, 50))
-def test_ssd_property_sweep(h, g, n, chunk, seed):
-    if h % g:
-        return
-    x, dt, a, b, c = _inputs(jax.random.key(seed), h=h, g=g, n=n, s=16)
-    y_ref, _ = ssd_sequential(x, dt, a, b, c)
-    y, _ = ssm.ssd_chunked(x, dt, a, b, c, chunk if chunk <= 16 else 16)
-    np.testing.assert_allclose(y, y_ref, atol=3e-4)
+if st is not None:
+    @settings(max_examples=10, deadline=None)
+    @given(h=st.sampled_from([2, 4]), g=st.sampled_from([1, 2]),
+           n=st.sampled_from([4, 16]), chunk=st.sampled_from([4, 8, 16]),
+           seed=st.integers(0, 50))
+    def test_ssd_property_sweep(h, g, n, chunk, seed):
+        if h % g:
+            return
+        x, dt, a, b, c = _inputs(jax.random.key(seed), h=h, g=g, n=n, s=16)
+        y_ref, _ = ssd_sequential(x, dt, a, b, c)
+        y, _ = ssm.ssd_chunked(x, dt, a, b, c, chunk if chunk <= 16 else 16)
+        np.testing.assert_allclose(y, y_ref, atol=3e-4)
+else:
+    def test_ssd_property_sweep():
+        pytest.importorskip("hypothesis")
 
 
 def test_decode_step_matches_chunked():
