@@ -1,4 +1,5 @@
-"""Serving throughput/latency: continuous batching vs the static engine.
+"""Serving throughput/latency: continuous batching vs the static engine, and
+prefix caching on a shared-system-prompt trace.
 
 A Poisson arrival trace of requests with heterogeneous generation lengths is
 served by both engines at several request rates. The static engine groups
@@ -7,14 +8,24 @@ arrivals into fixed batches and decodes each batch in lock-step until its
 nobody asked for. The continuous engine recycles a finished slot into the
 next queued request immediately, so aggregate tokens/sec tracks useful work.
 
-    PYTHONPATH=src python -m benchmarks.serving [--arch llama3.2-3b]
+The second section is the paper's memory-bound serving story end to end: a
+trace whose requests share one long system prompt (the production shape —
+millions of users, one template) is served with the prefix cache off and on.
+With it on, the shared prompt's K/V pages are computed once and refcounted
+into every request's page table, so prefill tokens computed, time-to-first-
+token, and peak pages-in-use all drop.
+
+    PYTHONPATH=src python -m benchmarks.serving [--arch llama3.2-3b] \
+        [--json serving_bench.json]
 
 Emits ``name,us_per_call,derived`` CSV rows like the other benchmarks, plus a
-human-readable summary with p50/p99 inter-token latency.
+human-readable summary with p50/p99 inter-token latency; ``--json`` writes
+the full result dict (CI uploads it as an artifact).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -41,6 +52,24 @@ def make_trace(n_requests, rate, *, prompt_len=32, gen_range=(8, 64), seed=0):
     return [Request(uid=i, prompt=[int(t) for t in prompts[i]],
                     max_new_tokens=int(gens[i]), arrival=float(arrivals[i]))
             for i in range(n_requests)]
+
+
+def make_shared_prefix_trace(n_requests, *, system_len=50, user_range=(4, 12),
+                             gen_range=(8, 24), seed=0):
+    """Every request = one shared system prompt + a short unique user suffix
+    (the template-serving shape prefix caching exists for). The default
+    system_len is deliberately NOT page-aligned, so the shared tail page
+    exercises the copy-on-write path too."""
+    rng = np.random.default_rng(seed)
+    system = [int(t) for t in rng.integers(5, 500, system_len)]
+    reqs = []
+    for i in range(n_requests):
+        user = [int(t) for t in
+                rng.integers(5, 500, int(rng.integers(*user_range)))]
+        reqs.append(Request(uid=i, prompt=system + user,
+                            max_new_tokens=int(rng.integers(gen_range[0],
+                                                            gen_range[1] + 1))))
+    return reqs
 
 
 def run_static(model, params, requests, batch_size):
@@ -81,16 +110,17 @@ def run_static(model, params, requests, batch_size):
     return token_times, wall
 
 
-def run_continuous(model, params, requests, slots):
+def run_continuous(model, params, requests, slots, *, prefix_cache=False):
     max_seq = max(len(r.prompt) + r.max_new_tokens for r in requests)
     num_pages = slots * pages_needed(max_seq + 1, PAGE_SIZE) + 2
     engine = ContinuousEngine(model, params, num_slots=slots,
                               num_pages=num_pages, page_size=PAGE_SIZE,
-                              max_seq_len=max_seq + PAGE_SIZE)
+                              max_seq_len=max_seq + PAGE_SIZE,
+                              prefix_cache=prefix_cache)
     t0 = time.perf_counter()
     results = engine.run(requests)
     wall = time.perf_counter() - t0
-    return {uid: r["token_times"] for uid, r in results.items()}, wall
+    return {uid: r["token_times"] for uid, r in results.items()}, wall, engine
 
 
 def summarize(token_times, wall):
@@ -104,19 +134,20 @@ def summarize(token_times, wall):
             "p99_ms": float(np.percentile(gaps, 99) * 1e3)}
 
 
-def run(arch_name="llama3.2-3b", n_requests=16, slots=4,
-        rates=(4.0, 16.0, float("inf"))) -> None:
-    arch = smoke_config(arch_name)
-    model = build_model(arch)
-    params = model.init(jax.random.key(0))
-    params = jax.tree.map(lambda p: p.astype(jnp.dtype(arch.dtype)), params)
+def mean_ttft_ms(token_times, requests):
+    arrivals = {r.uid: r.arrival for r in requests}
+    ttfts = [times[0] - arrivals[uid]
+             for uid, times in token_times.items() if times]
+    return float(np.mean(ttfts) * 1e3) if ttfts else float("nan")
 
+
+def run_rates(model, params, n_requests, slots, rates, results):
     for rate in rates:
         trace = make_trace(n_requests, rate)
         tag = "inf" if np.isinf(rate) else f"{rate:g}"
         st_times, st_wall = run_static(model, params, trace, slots)
         st = summarize(st_times, st_wall)
-        ct_times, ct_wall = run_continuous(model, params, trace, slots)
+        ct_times, ct_wall, _ = run_continuous(model, params, trace, slots)
         ct = summarize(ct_times, ct_wall)
         emit(f"serve_static_rate{tag}", st_wall * 1e6 / max(1, n_requests),
              f"{st['tok_s']:.1f}tok/s_p50={st['p50_ms']:.1f}ms_"
@@ -128,6 +159,57 @@ def run(arch_name="llama3.2-3b", n_requests=16, slots=4,
         print(f"[serving] rate={tag} req/s: static {st['tok_s']:.1f} tok/s "
               f"vs continuous {ct['tok_s']:.1f} tok/s "
               f"({speedup:.2f}x aggregate throughput)")
+        results["rates"][tag] = {"static": st, "continuous": ct,
+                                 "speedup": speedup}
+
+
+def run_shared_prefix(model, params, n_requests, slots, results):
+    trace = make_shared_prefix_trace(n_requests)
+    out = {}
+    for prefix_cache in (False, True):
+        times, wall, engine = run_continuous(model, params, trace, slots,
+                                             prefix_cache=prefix_cache)
+        tag = "on" if prefix_cache else "off"
+        out[tag] = {
+            **summarize(times, wall),
+            "ttft_ms": mean_ttft_ms(times, trace),
+            "prefill_tokens": engine.prefill_tokens,
+            "cached_prefill_tokens": engine.cached_prefill_tokens,
+            "cow_copies": engine.cow_copies,
+            # pages the drained engine still holds = the resident prefix cache
+            "pages_in_use_after_drain": engine.pages_in_use,
+            "live_kv_tokens_after_drain": engine.live_kv_tokens,
+        }
+        emit(f"serve_prefix_{tag}", wall * 1e6 / max(1, n_requests),
+             f"prefill_tok={engine.prefill_tokens}_"
+             f"ttft={out[tag]['ttft_ms']:.1f}ms")
+    off, on = out["off"], out["on"]
+    print(f"[serving] shared-prefix trace ({n_requests} requests): "
+          f"prefill tokens {off['prefill_tokens']} -> {on['prefill_tokens']} "
+          f"({off['prefill_tokens'] / max(on['prefill_tokens'], 1):.1f}x "
+          f"fewer computed), "
+          f"mean TTFT {off['ttft_ms']:.1f} -> {on['ttft_ms']:.1f} ms, "
+          f"{on['cached_prefill_tokens']} tokens served from cache, "
+          f"{on['cow_copies']} CoW tail copies")
+    results["shared_prefix"] = out
+
+
+def run(arch_name="llama3.2-3b", n_requests=16, slots=4,
+        rates=(4.0, 16.0, float("inf")), json_path=None) -> dict:
+    arch = smoke_config(arch_name)
+    model = build_model(arch)
+    params = model.init(jax.random.key(0))
+    params = jax.tree.map(lambda p: p.astype(jnp.dtype(arch.dtype)), params)
+
+    results = {"arch": arch_name, "n_requests": n_requests, "slots": slots,
+               "backend": jax.default_backend(), "rates": {}}
+    run_rates(model, params, n_requests, slots, rates, results)
+    run_shared_prefix(model, params, n_requests, slots, results)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"[serving] wrote {json_path}")
+    return results
 
 
 def main() -> None:
@@ -135,9 +217,11 @@ def main() -> None:
     ap.add_argument("--arch", default="llama3.2-3b")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--json", default="",
+                    help="also write the full results dict to this path")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    run(args.arch, args.requests, args.slots)
+    run(args.arch, args.requests, args.slots, json_path=args.json or None)
 
 
 if __name__ == "__main__":

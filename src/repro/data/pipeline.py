@@ -43,6 +43,10 @@ class DataConfig:
     zipf_a: float = 1.2
     markov_p: float = 0.35         # P(next token correlated with current)
 
+    def __post_init__(self):
+        # SeedSequence entropy (and default_rng in __init__) require this
+        assert self.seed >= 0, "DataConfig.seed must be non-negative"
+
 
 class SyntheticPipeline:
     def __init__(self, cfg: DataConfig):
@@ -58,10 +62,20 @@ class SyntheticPipeline:
                                   size=cfg.vocab_size).astype(np.int32)
 
     # ------------------------------------------------------------------ core ---
+    def _rng(self, step: int, domain: int) -> np.random.Generator:
+        """Collision-free per-(seed, step, host) stream. Arithmetic mixes like
+        ``seed*7 + step*13 + host_id`` alias across (step, host) pairs — e.g.
+        (step=1, host=0) and (step=0, host=13) — handing different hosts (or
+        adjacent steps) identical MLM masks. SeedSequence hashes the tuple
+        coordinates independently; ``domain`` separates the token stream from
+        the masking stream at the same coordinates."""
+        cfg = self.cfg
+        return np.random.default_rng(
+            np.random.SeedSequence((cfg.seed, step, cfg.host_id, domain)))
+
     def _tokens_for(self, step: int) -> np.ndarray:
         cfg = self.cfg
-        rng = np.random.default_rng(
-            (cfg.seed * 1_000_003 + step) * 4096 + cfg.host_id)
+        rng = self._rng(step, 0)
         b, s = self.local_batch, cfg.seq_len
         base = rng.choice(cfg.vocab_size, size=(b, s), p=self._probs)
         corr = rng.random((b, s)) < cfg.markov_p
@@ -73,7 +87,7 @@ class SyntheticPipeline:
     def batch(self, step: int) -> Dict[str, np.ndarray]:
         cfg = self.cfg
         toks = self._tokens_for(step)
-        rng = np.random.default_rng(cfg.seed * 7 + step * 13 + cfg.host_id)
+        rng = self._rng(step, 1)
         if cfg.objective == "causal":
             inputs = toks
             targets = np.roll(toks, -1, axis=1)

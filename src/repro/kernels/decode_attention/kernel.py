@@ -14,6 +14,12 @@ Layout: q [B, Hkv, G, D] (G = Hq/Hkv query heads per KV head); k/v pools
 online-softmax accumulators (acc, m, l) in VMEM scratch. Pages at or past
 seq_len are skipped with ``pl.when`` (their table entries point at the null
 page 0), so per-step work tracks the sequence's *actual* length, not max_len.
+
+``_paged_prefill_kernel`` is the multi-query sibling used by chunked prefill:
+one prompt chunk of C tokens (single sequence, grid (Hkv, max_pages)) attends
+causally to the cached prefix plus itself through the same scalar-prefetched
+page walk, with [C*G, D] accumulators — so prompt ingestion streams page-sized
+K/V tiles exactly like decode instead of materializing a dense cache.
 """
 from __future__ import annotations
 
@@ -61,6 +67,98 @@ def _paged_decode_kernel(pt_ref, sl_ref, q_ref, k_ref, v_ref, o_ref,
     def _finalize():
         o_ref[0, 0] = (acc_ref[...] /
                        jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def _paged_prefill_kernel(pt_ref, meta_ref, q_ref, k_ref, v_ref, o_ref,
+                          acc_ref, m_ref, l_ref, *, page_size, g, scale):
+    j = pl.program_id(1)
+    start = meta_ref[0]                 # tokens already cached (chunk offset)
+    total = meta_ref[1]                 # valid cache length after this chunk
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # a page contributes iff some valid token can see it: causality caps the
+    # visible cache at the chunk's last valid position (total - 1)
+    @pl.when(j * page_size < total)
+    def _compute():
+        c = q_ref.shape[0]
+        q = q_ref[:, 0].astype(jnp.float32).reshape(c * g, -1) * scale
+        k = k_ref[0, :, 0, :].astype(jnp.float32)             # [page, D]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [C*G, page]
+        rows = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // g
+        cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) + j * page_size
+        # causal within the chunk (query i sits at position start + i) and
+        # clipped to the valid cache; padding rows end up fully masked
+        s = jnp.where((cols <= start + rows) & (cols < total), s, NEG_INF)
+        m_prev = m_ref[...]                                   # [C*G, 1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(p, v)
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _finalize():
+        c = q_ref.shape[0]
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[:, 0] = out.reshape(c, g, -1).astype(o_ref.dtype)
+
+
+def paged_prefill_attention_fwd(q, k_pages, v_pages, page_row, start,
+                                total_len, *, interpret=False):
+    """Chunked-prefill attention for ONE sequence against its paged cache.
+
+    q [C, Hq, D] (the chunk's queries; row i sits at position start + i);
+    k/v_pages [P, page, Hkv, D] — the chunk's K/V must already be written
+    into the pages; page_row [max_pages]; start / total_len scalars with
+    total_len = start + valid tokens in the chunk. -> [C, Hq, D]. Rows at or
+    past total_len are padding: they attend to the valid prefix and return
+    well-defined garbage the caller ignores.
+    """
+    c, hq, d = q.shape
+    _, page_size, hkv, _ = k_pages.shape
+    g = hq // hkv
+    assert hq == g * hkv, (hq, hkv)
+    max_pages = page_row.shape[0]
+    scale = 1.0 / (d ** 0.5)
+
+    qg = q.reshape(c, hkv, g, d)
+    pt = page_row.astype(jnp.int32)
+    meta = jnp.stack([jnp.asarray(start, jnp.int32),
+                      jnp.asarray(total_len, jnp.int32)])
+
+    kern = functools.partial(_paged_prefill_kernel, page_size=page_size,
+                             g=g, scale=scale)
+    out = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(hkv, max_pages),
+            in_specs=[
+                pl.BlockSpec((c, 1, g, d), lambda h, j, pt, meta: (0, h, 0, 0)),
+                pl.BlockSpec((1, page_size, 1, d),
+                             lambda h, j, pt, meta: (pt[j], 0, h, 0)),
+                pl.BlockSpec((1, page_size, 1, d),
+                             lambda h, j, pt, meta: (pt[j], 0, h, 0)),
+            ],
+            out_specs=pl.BlockSpec((c, 1, g, d),
+                                   lambda h, j, pt, meta: (0, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((c * g, d), jnp.float32),
+                pltpu.VMEM((c * g, 1), jnp.float32),
+                pltpu.VMEM((c * g, 1), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((c, hkv, g, d), q.dtype),
+        interpret=interpret,
+    )(pt, meta, qg, k_pages, v_pages)
+    return out.reshape(c, hq, d)
 
 
 def paged_decode_attention_fwd(q, k_pages, v_pages, page_table, seq_lens, *,

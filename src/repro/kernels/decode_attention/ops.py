@@ -25,3 +25,18 @@ def paged_decode_attention(q, k_pages, v_pages, page_table, seq_lens, *,
     from . import ref
     return ref.paged_decode_attention(q, k_pages, v_pages, page_table,
                                       seq_lens)
+
+
+def paged_prefill_attention(q, k_pages, v_pages, page_row, start, total_len,
+                            *, interpret=False):
+    """Chunked-prefill attention for one sequence (see kernel/ref docstrings).
+    q [C, Hq, D]; page_row [max_pages]; total_len = start + valid chunk
+    tokens -> [C, Hq, D]."""
+    if supported() or interpret:
+        from . import kernel
+        return kernel.paged_prefill_attention_fwd(
+            q, k_pages, v_pages, page_row, start, total_len,
+            interpret=interpret)
+    from . import ref
+    return ref.paged_prefill_attention(q, k_pages, v_pages, page_row, start,
+                                       total_len)

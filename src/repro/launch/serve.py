@@ -4,8 +4,10 @@ static      the original fixed-batch driver: one dense KV cache of
             ``batch * (prompt_len + gen_len)`` rows, every request padded to
             the worst case and decoded in lock-step.
 continuous  ``repro.serving.ContinuousEngine``: paged KV cache + scheduler —
-            requests are admitted/recycled mid-flight and live KV memory
-            tracks actual generated lengths.
+            requests are admitted/recycled mid-flight, prompts are ingested
+            by chunked prefill, shared prompt prefixes are served from the
+            refcounted prefix cache (``--no-prefix-cache`` to disable), and
+            live KV memory tracks actual generated lengths.
 
 Both engines are greedy at ``--temperature 0`` and produce identical token
 ids for the same prompts (tested in tests/test_serving.py).
@@ -84,7 +86,9 @@ def _run_continuous(model, params, args, arch) -> dict:
         b * pages_needed(max_seq + 1, args.page_size) + 2)
     engine = ContinuousEngine(model, params, num_slots=args.slots or b,
                               num_pages=num_pages, page_size=args.page_size,
-                              max_seq_len=max_seq + args.page_size)
+                              max_seq_len=max_seq + args.page_size,
+                              prefix_cache=args.prefix_cache,
+                              prefill_chunk=args.prefill_chunk or None)
     reqs = [Request(uid=i, prompt=[int(t) for t in prompt[i]],
                     max_new_tokens=glen) for i in range(b)]
     t0 = time.perf_counter()
@@ -94,11 +98,15 @@ def _run_continuous(model, params, args, arch) -> dict:
     total_tokens = out.size
     print(f"[serve/continuous] {arch.name}: {b} requests x {glen} tokens in "
           f"{wall*1e3:.1f}ms ({total_tokens/wall:.1f} tok/s, "
-          f"{engine.steps} decode steps, {engine.prefills} prefills)")
+          f"{engine.steps} decode steps, {engine.prefills} prefills, "
+          f"{engine.prefill_tokens} prompt tokens computed / "
+          f"{engine.cached_prefill_tokens} from prefix cache)")
     print(f"[serve/continuous] sample generations (first 8 ids/row): "
           f"{out[:2, :8].tolist()}")
     return {"tokens": out, "wall": wall, "steps": engine.steps,
-            "prefills": engine.prefills}
+            "prefills": engine.prefills,
+            "prefill_tokens": engine.prefill_tokens,
+            "cached_prefill_tokens": engine.cached_prefill_tokens}
 
 
 def main(argv=None) -> dict:
@@ -118,6 +126,13 @@ def main(argv=None) -> dict:
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--num-pages", type=int, default=0,
                     help="KV pool pages (default: sized to the request set)")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="share cached prompt-prefix pages across requests "
+                         "(--no-prefix-cache to disable)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked-prefill tokens per step, a page multiple "
+                         "(default: 4 pages)")
     args = ap.parse_args(argv)
 
     arch = smoke_config(args.arch) if args.smoke else get_config(args.arch)

@@ -393,6 +393,41 @@ def init_paged_kv_cache(arch: ArchConfig, num_pages: int, page_size: int,
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
+def paged_prefill_attention_layer(arch: ArchConfig, p: PyTree, x: jax.Array,
+                                  cache: PyTree, page_row: jax.Array,
+                                  start: jax.Array, total_len: jax.Array,
+                                  mrope_positions=None
+                                  ) -> Tuple[jax.Array, PyTree]:
+    """One prompt chunk of a single sequence, written directly into its pages.
+
+    x [1, C, D] — chunk token embeddings (row i at absolute position
+    start + i); page_row [max_pages] (this sequence's page-table row);
+    start = tokens already cached; total_len = start + valid tokens in the
+    chunk (the rest of the chunk is padding). K/V rows land straight in the
+    page pool — no dense bucket cache, no scatter pass — and padding rows
+    (or rows past the allocated pages) are routed to the null page 0.
+    """
+    b, c, _ = x.shape
+    assert b == 1, "chunked prefill runs one sequence at a time"
+    page_size = cache["k"].shape[1]
+    max_pages = page_row.shape[0]
+    q, k, v = qkv_project(arch, p, x)                        # [1,C,H*,D]
+    pos = jnp.asarray(start, jnp.int32) + jnp.arange(c, dtype=jnp.int32)
+    q, k = position_encode(arch, q, k, pos[None], mrope_positions)
+    logical = pos // page_size
+    valid = (pos < total_len) & (logical < max_pages)
+    pids = jnp.where(valid,
+                     page_row[jnp.clip(logical, 0, max_pages - 1)], 0)
+    offs = pos % page_size
+    new_k = cache["k"].at[pids, offs].set(k[0])
+    new_v = cache["v"].at[pids, offs].set(v[0])
+    from ..kernels.decode_attention import ops as pd_ops
+    o = pd_ops.paged_prefill_attention(q[0], new_k, new_v, page_row, start,
+                                       total_len)
+    y = dense(o.reshape(1, c, arch.q_dim), p["wo"], p.get("bo"))
+    return y, {"k": new_k, "v": new_v}
+
+
 def paged_decode_attention_layer(arch: ArchConfig, p: PyTree, x: jax.Array,
                                  cache: PyTree, page_table: jax.Array,
                                  seq_lens: jax.Array,

@@ -297,6 +297,49 @@ def paged_decode_stack(arch: ArchConfig, stacked: PyTree, caches: PyTree,
     return x, new_caches
 
 
+def paged_prefill_period(arch: ArchConfig, p: PyTree, cache: PyTree,
+                         x: jax.Array, page_row: jax.Array, start: jax.Array,
+                         total_len: jax.Array, mrope_positions=None
+                         ) -> Tuple[jax.Array, PyTree]:
+    new_cache: PyTree = {}
+    for i in range(period_length(arch)):
+        x = constrain(x, "batch", None, None)
+        blk = p[f"layer_{i}"]
+
+        def mix(h, blk=blk, i=i):
+            return attn_lib.paged_prefill_attention_layer(
+                arch, blk["attn"], h, cache[f"layer_{i}"], page_row, start,
+                total_len, mrope_positions)
+        x, new_cache[f"layer_{i}"] = _decode_block_mix(arch, blk, x, mix)
+        x = _decode_block_ffn(arch, blk, x)
+    return x, new_cache
+
+
+def paged_prefill_stack(arch: ArchConfig, stacked: PyTree, caches: PyTree,
+                        x: jax.Array, page_row: jax.Array, start: jax.Array,
+                        total_len: jax.Array, mrope_positions=None
+                        ) -> Tuple[jax.Array, PyTree]:
+    """Chunked prefill: one prompt chunk [1, C, D] of one sequence through
+    the stack, K/V written straight into the sequence's pages."""
+    if isinstance(stacked, dict) and any(k.startswith("period_") for k in stacked):
+        new_caches: PyTree = {}
+        for z in range(len(stacked)):
+            x, nc = paged_prefill_period(arch, stacked[f"period_{z}"],
+                                         caches[f"period_{z}"], x, page_row,
+                                         start, total_len, mrope_positions)
+            new_caches[f"period_{z}"] = nc
+        return x, new_caches
+
+    def scan_body(h, inputs):
+        period_params, cache = inputs
+        h, new_cache = paged_prefill_period(arch, period_params, cache, h,
+                                            page_row, start, total_len,
+                                            mrope_positions)
+        return h, new_cache
+    x, new_caches = jax.lax.scan(scan_body, x, (stacked, caches))
+    return x, new_caches
+
+
 def decode_period(arch: ArchConfig, p: PyTree, cache: PyTree, x: jax.Array,
                   positions: jax.Array, mrope_positions=None
                   ) -> Tuple[jax.Array, PyTree]:

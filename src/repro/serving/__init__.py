@@ -1,15 +1,20 @@
 """Continuous-batching serving engine over a paged KV cache.
 
-- ``kv_cache``  : page-pool allocator + per-slot page-table/length state
-- ``scheduler`` : request queue, admission by free-page count, slot recycling,
-                  recompute-preemption on pool pressure
-- ``engine``    : ``ContinuousEngine`` — fixed-shape jitted prefill/decode
-                  steps driven by the scheduler, so requests join and leave
-                  mid-flight without recompilation
+- ``kv_cache``  : refcounted page-pool allocator + per-slot page-table/length
+                  state (shared prefix pages are stored once)
+- ``scheduler`` : request queue, admission by free-page count with anti-thrash
+                  headroom, radix prefix index (page-aligned sharing + CoW
+                  tails, LRU eviction), slot recycling, recompute-preemption
+                  on pool pressure
+- ``engine``    : ``ContinuousEngine`` — fixed-shape jitted chunked-prefill /
+                  decode steps driven by the scheduler, so requests join and
+                  leave mid-flight without recompilation and long prompts
+                  never stall running decodes
 """
 from .engine import ContinuousEngine
 from .kv_cache import PageAllocator, PagedCacheState, pages_needed
-from .scheduler import Request, Scheduler, SequenceState
+from .scheduler import PrefixIndex, Request, Scheduler, SequenceState
 
 __all__ = ["ContinuousEngine", "PageAllocator", "PagedCacheState",
-           "pages_needed", "Request", "Scheduler", "SequenceState"]
+           "PrefixIndex", "pages_needed", "Request", "Scheduler",
+           "SequenceState"]

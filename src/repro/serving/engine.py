@@ -1,11 +1,23 @@
-"""ContinuousEngine: greedy serving with continuous batching.
+"""ContinuousEngine: greedy serving with continuous batching, prefix caching,
+and chunked prefill.
 
 Shapes the compiler sees are fixed — decode always runs the full
 ``num_slots`` batch against the same page pools and a [num_slots, max_pages]
 page table — so requests join and leave mid-flight without recompiling.
-Prefill runs per request (batch 1) at a page-aligned bucket length and its
-dense K/V rows are scattered into freshly allocated pages; only the handful
-of distinct bucket lengths ever trigger a compile.
+Prompt ingestion is *chunked prefill*: one page-multiple chunk of one
+sequence per engine iteration, written straight into the sequence's pages by
+the paged-prefill path (``models.transformer.paged_prefill_stack``), so
+
+- a long prompt no longer stalls every running decode for a full-prompt
+  forward pass (decode steps interleave between its chunks), and
+- the prefill compile cache holds exactly ONE shape (the chunk), not one
+  entry per page-aligned bucket length.
+
+Prefix caching closes the loop: the scheduler's radix index matches each
+prompt against already-resident pages (shared via refcounts; a partially
+matching tail page is copied on divergence — the engine's CoW device copy),
+and only the unmatched suffix is chunk-prefilled. Under shared system
+prompts this removes most prefill FLOPs *and* most prefill HBM writes.
 
 The engine is deliberately greedy-only: parity with the static engine
 (``repro.launch.serve --engine static``) must be exact, and greedy decode is
@@ -15,7 +27,7 @@ from __future__ import annotations
 
 import time
 from collections import deque
-from typing import Dict, List, Optional, Sequence
+from typing import Deque, Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -32,7 +44,8 @@ SERVABLE_FAMILIES = ("dense", "moe", "vlm")
 class ContinuousEngine:
     def __init__(self, model: Model, params, *, num_slots: int = 8,
                  num_pages: int = 256, page_size: int = 16,
-                 max_seq_len: int = 512):
+                 max_seq_len: int = 512, prefix_cache: bool = True,
+                 prefill_chunk: Optional[int] = None):
         arch = model.arch
         assert arch.family in SERVABLE_FAMILIES, \
             f"continuous engine serves attention-only LMs, not {arch.family}"
@@ -47,20 +60,33 @@ class ContinuousEngine:
         self.page_size = page_size
         self.num_slots = num_slots
         self.max_pages_per_seq = pages_needed(max_seq_len, page_size)
+        if prefill_chunk is None:
+            prefill_chunk = 4 * page_size
+        assert prefill_chunk % page_size == 0 and prefill_chunk > 0, \
+            "prefill chunk must be a positive page multiple"
+        self.prefill_chunk = prefill_chunk
         self.scheduler = Scheduler(num_slots=num_slots, num_pages=num_pages,
                                    page_size=page_size,
-                                   max_pages_per_seq=self.max_pages_per_seq)
+                                   max_pages_per_seq=self.max_pages_per_seq,
+                                   prefix_cache=prefix_cache)
         self.pools = tf.init_paged_caches(arch, num_pages, page_size,
                                           jnp.dtype(arch.dtype))
         self.steps = 0                  # decode steps executed (for stats)
-        self.prefills = 0
-        self._prefill_fns: Dict[int, object] = {}
-        self._scatter_fns: Dict[int, object] = {}
-        # donate the page pools through decode AND scatter: without it each
+        self.prefills = 0               # prefill completions (== admissions)
+        self.prefill_tokens = 0         # prompt tokens actually computed
+        self.cached_prefill_tokens = 0  # prompt tokens served from the cache
+        self.cow_copies = 0             # divergent tail pages duplicated
+        self._prefilling: Deque[SequenceState] = deque()
+        # donate the page pools through decode AND prefill: without it each
         # call copies every layer's [P, page, Hkv, D] pool to update a few rows
         self._donate_pools = jax.default_backend() in ("tpu", "gpu")
         donate = (1,) if self._donate_pools else ()
         self._decode = jax.jit(self._decode_impl, donate_argnums=donate)
+        self._prefill = jax.jit(self._prefill_impl, donate_argnums=donate,
+                                static_argnames=("final",))
+        self._copy_page = jax.jit(     # pools are argument 0 here, not 1
+            self._copy_page_impl,
+            donate_argnums=(0,) if self._donate_pools else ())
 
     # ------------------------------------------------------------- jitted fns ---
     def _decode_impl(self, params, pools, page_table, seq_lens, tokens):
@@ -75,64 +101,82 @@ class ContinuousEngine:
         logits = self.model._logits(params, x)[:, 0]
         return jnp.argmax(logits, axis=-1).astype(jnp.int32), pools
 
-    def _prefill_fn(self, bucket: int):
-        fn = self._prefill_fns.get(bucket)
-        if fn is None:
-            def impl(params, caches, tokens, last_idx):
-                x = self.model._embed(params, tokens)
-                pos0 = jnp.zeros((1,), jnp.int32)
-                x, caches = tf.decode_stack(self.arch, params["blocks"],
-                                            caches, x, pos0)
-                xl = jax.lax.dynamic_slice_in_dim(x, last_idx, 1, axis=1)
-                return self.model._logits(params, xl), caches
-            fn = self._prefill_fns[bucket] = jax.jit(impl)
-        return fn
+    def _prefill_impl(self, params, pools, tokens, page_row, start, total, *,
+                      final):
+        """One prompt chunk of one sequence. tokens [1, C] (padded past
+        ``total - start`` valid tokens) -> (greedy token after the chunk's
+        last valid token [scalar], new pools). One compiled shape (two
+        variants: only the final chunk pays the LM-head pass — earlier
+        chunks exist to fill pages, their logits would be discarded)."""
+        x = self.model._embed(params, tokens)
+        x, pools = tf.paged_prefill_stack(self.arch, params["blocks"], pools,
+                                          x, page_row, start, total)
+        if not final:
+            return jnp.zeros((), jnp.int32), pools
+        xl = jax.lax.dynamic_slice_in_dim(x, total - 1 - start, 1, axis=1)
+        logits = self.model._logits(params, xl)[:, 0]
+        return jnp.argmax(logits[0], axis=-1).astype(jnp.int32), pools
 
-    def _scatter_fn(self, n_pages: int):
-        fn = self._scatter_fns.get(n_pages)
-        if fn is None:
-            page = self.page_size
-
-            def impl(pools, caches, pids):
-                def leaf(pool, dense):
-                    if pool.ndim == 5:  # scanned stack: [nper, P, page, H, D]
-                        nper, _, _, hk, dh = pool.shape
-                        rows = dense.reshape(nper, n_pages, page, hk, dh)
-                        return pool.at[:, pids].set(rows)
-                    _, _, hk, dh = pool.shape
-                    rows = dense.reshape(n_pages, page, hk, dh)
-                    return pool.at[pids].set(rows)
-                return jax.tree.map(leaf, pools, caches)
-            donate = (0,) if self._donate_pools else ()
-            fn = self._scatter_fns[n_pages] = jax.jit(impl,
-                                                      donate_argnums=donate)
-        return fn
+    def _copy_page_impl(self, pools, src, dst):
+        """Copy-on-write: duplicate one physical page across every layer."""
+        def leaf(pool):
+            if pool.ndim == 5:          # scanned stack: [nper, P, page, H, D]
+                return pool.at[:, dst].set(pool[:, src])
+            return pool.at[dst].set(pool[src])
+        return jax.tree.map(leaf, pools)
 
     # --------------------------------------------------------------- prefill ----
-    def _prefill_seq(self, seq: SequenceState) -> int:
-        """Run prompt(+resumed tokens) prefill, scatter K/V into the
-        sequence's pages, and return the first greedy token."""
-        ctx = seq.context
-        n_pages = pages_needed(len(ctx), self.page_size)
-        bucket = n_pages * self.page_size
-        tokens = np.zeros((1, bucket), np.int32)
-        tokens[0, :len(ctx)] = ctx
-        dense_caches = self.model.init_caches(None, 1, bucket)
-        logits, dense_caches = self._prefill_fn(bucket)(
-            self.params, dense_caches, jnp.asarray(tokens),
-            jnp.int32(len(ctx) - 1))
-        pids = jnp.asarray(
-            self.scheduler.cache.page_table[seq.slot, :n_pages])
-        self.pools = self._scatter_fn(n_pages)(self.pools, dense_caches, pids)
-        self.prefills += 1
-        return int(np.argmax(np.asarray(logits[0, 0])))
+    def _start_prefill(self, seq: SequenceState) -> None:
+        """Execute the admission's CoW copy (if any) and queue the suffix."""
+        if seq.cow is not None:
+            src, dst = seq.cow
+            self.pools = self._copy_page(self.pools, jnp.int32(src),
+                                         jnp.int32(dst))
+            self.scheduler.cow_done(seq)
+            self.cow_copies += 1
+        self.cached_prefill_tokens += seq.cached_len
+        self._prefilling.append(seq)
+
+    def _advance_prefill(self, now) -> None:
+        """Run ONE chunk of the oldest pending prefill; on the final chunk,
+        emit the sequence's next greedy token and publish its pages into the
+        prefix index."""
+        sched = self.scheduler
+        while self._prefilling:
+            seq = self._prefilling[0]
+            if sched.running.get(seq.slot) is not seq:
+                self._prefilling.popleft()      # preempted while waiting
+                continue
+            ctx = seq.context
+            start = seq.prefilled
+            end = min(start + self.prefill_chunk, seq.prefill_target)
+            chunk = np.zeros((1, self.prefill_chunk), np.int32)
+            chunk[0, :end - start] = ctx[start:end]
+            page_row = jnp.asarray(sched.cache.page_table[seq.slot])
+            tok, self.pools = self._prefill(
+                self.params, self.pools, jnp.asarray(chunk), page_row,
+                jnp.int32(start), jnp.int32(end),
+                final=end == seq.prefill_target)
+            seq.prefilled = end
+            self.prefill_tokens += end - start
+            if end == seq.prefill_target:
+                self._prefilling.popleft()
+                self.prefills += 1
+                sched.register_prefix(seq.slot, ctx)
+                seq.generated.append(int(tok))
+                seq.token_times.append(now())
+            return
+
+    def _prefill_pending(self, slot: int) -> bool:
+        seq = self.scheduler.running.get(slot)
+        return seq is not None and seq.prefilled < seq.prefill_target
 
     # ------------------------------------------------------------------- run ----
     def run(self, requests: Sequence[Request], *,
             time_fn=time.perf_counter) -> Dict[int, dict]:
         """Serve a trace to completion. Requests with ``arrival > 0`` are held
         back until the trace clock reaches them. Returns
-        uid -> {"tokens", "token_times", "prompt_len"}."""
+        uid -> {"tokens", "token_times", "prompt_len"[, "error"]}."""
         sched = self.scheduler
         pending = deque(sorted(requests, key=lambda r: (r.arrival, r.uid)))
         results: Dict[int, dict] = {}
@@ -143,6 +187,9 @@ class ContinuousEngine:
             return time_fn() - t0 + skip
 
         def finish(seq: SequenceState) -> None:
+            # context[:-1] is what's actually in the pages (the last generated
+            # token's K/V was never written) — publish it before releasing
+            sched.register_prefix(seq.slot, seq.context[:-1])
             sched.finish(seq)
             results[seq.request.uid] = {
                 "tokens": list(seq.generated),
@@ -154,17 +201,39 @@ class ContinuousEngine:
             while pending and pending[0].arrival <= now():
                 sched.submit(pending.popleft())
 
-            # admit + prefill everything that fits right now. The prefill
-            # argmax is always a *new* token: the first generation for a
-            # fresh request, the continuation for a resumed preemption
-            # (whose regenerated context is re-prefilled in one shot).
-            while True:
+            # a prefill whose sequence was preempted must not gate admission
+            # (or trip the stall check below against an admittable queue)
+            while self._prefilling and sched.running.get(
+                    self._prefilling[0].slot) is not self._prefilling[0]:
+                self._prefilling.popleft()
+            # with the prefix cache on, admit only while no prefill is in
+            # flight (one admission per iteration): serializing admission
+            # behind the running prefill lets a later request prefix-match
+            # the pages the current one is about to register, which
+            # same-wave admission would miss. With it off there is nothing
+            # to match — admit everything that fits, PR-1 style
+            while sched.prefix is None or not self._prefilling:
                 seq = sched.admit_next()
                 if seq is None:
                     break
-                seq.generated.append(self._prefill_seq(seq))
-                seq.token_times.append(now())
-                if seq.done:
+                self._start_prefill(seq)
+            for req in sched.take_rejected():
+                results[req.uid] = {
+                    "tokens": [], "token_times": [],
+                    "prompt_len": len(req.prompt),
+                    "error": "context exceeds max_seq_len "
+                             f"({self.max_pages_per_seq} pages/seq)",
+                }
+
+            # one prompt chunk per iteration: decode steps interleave between
+            # a long prompt's chunks instead of stalling behind it. The chunk
+            # argmax on the final chunk is always a *new* token: the first
+            # generation for a fresh request, the continuation for a resumed
+            # preemption (whose regenerated context is re-prefilled).
+            self._advance_prefill(now)
+            for slot in list(sched.running):
+                seq = sched.running[slot]
+                if seq.done and not self._prefill_pending(slot):
                     finish(seq)
 
             if not sched.running:
@@ -184,16 +253,27 @@ class ContinuousEngine:
 
             sched.ensure_capacity()     # may preempt; victims re-enter later
 
-            slots = sched.running_slots()
+            # decode the slots whose prefill is complete; mid-prefill slots
+            # are masked to the null page so the fixed-shape step stays hot
+            slots = [s for s in sched.running_slots()
+                     if not self._prefill_pending(s)]
             if not slots:
                 continue
+            cache = sched.cache
+            page_table, seq_lens = cache.page_table, cache.seq_lens
+            if len(slots) != len(sched.running):
+                page_table = page_table.copy()
+                seq_lens = seq_lens.copy()
+                for s in sched.running:
+                    if self._prefill_pending(s):
+                        page_table[s] = 0
+                        seq_lens[s] = 0
             tokens = np.zeros((self.num_slots,), np.int32)
             for slot in slots:
                 tokens[slot] = sched.running[slot].generated[-1]
-            cache = sched.cache
             next_tokens, self.pools = self._decode(
-                self.params, self.pools, jnp.asarray(cache.page_table),
-                jnp.asarray(cache.seq_lens), jnp.asarray(tokens))
+                self.params, self.pools, jnp.asarray(page_table),
+                jnp.asarray(seq_lens), jnp.asarray(tokens))
             self.steps += 1
             next_np = np.asarray(next_tokens)
             t_tok = now()
@@ -209,4 +289,11 @@ class ContinuousEngine:
     # ----------------------------------------------------------------- stats ----
     @property
     def live_kv_tokens(self) -> int:
+        """Logical tokens resident across running sequences (seq_lens sum)."""
         return self.scheduler.cache.live_tokens
+
+    @property
+    def pages_in_use(self) -> int:
+        """Distinct physical pages held — with prefix sharing this undercuts
+        the logical page count (the dedup the README's memory math prices)."""
+        return self.scheduler.allocator.used_count

@@ -5,21 +5,25 @@ The device side is a pytree of per-layer page pools built by
 arrays whose first axis is indexed by *physical page id*. This module owns
 everything about which pages belong to whom:
 
-- ``PageAllocator``  : free-list over physical ids 1..P-1 (page 0 is the null
-                       page — a write sink for inactive slots, never owned by
-                       a sequence).
+- ``PageAllocator``  : reference-counted free-list over physical ids 1..P-1
+                       (page 0 is the null page — a write sink for inactive
+                       slots, never owned by a sequence). A full page whose
+                       K/V is shared by N sequences (prefix caching) is stored
+                       once and carries N holds; it returns to the free list
+                       only when the last hold drops.
 - ``PagedCacheState``: per-slot page table + sequence length, mirrored as
                        numpy on the host (mutated cheaply every step) and
                        shipped to the device as two small int32 arrays.
 
 Live KV memory is ``pages_in_use * page_size`` tokens instead of the dense
-cache's ``num_slots * max_len`` — the memory math behind continuous batching
-(see README §Serving).
+cache's ``num_slots * max_len`` — the memory math behind continuous batching —
+and with prefix sharing the physical page count drops below the logical
+``sum(seq_lens) / page_size`` (see README §Serving).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -31,18 +35,20 @@ def pages_needed(num_tokens: int, page_size: int) -> int:
 
 
 class PageAllocator:
-    """All-or-nothing free-list allocator over physical page ids.
+    """All-or-nothing, reference-counted free-list allocator over page ids.
 
     Page 0 is reserved (null page). ``alloc`` either returns exactly ``n``
-    distinct pages or None — admission control refuses rather than partially
-    allocating.
+    distinct pages (each with one hold) or None — admission control refuses
+    rather than partially allocating. ``incref`` adds a hold to a live page
+    (copy-on-write sharing); ``free`` drops one hold per page and recycles a
+    page only when its last hold is gone.
     """
 
     def __init__(self, num_pages: int):
         assert num_pages >= 2, "need at least one real page beyond the null page"
         self.num_pages = num_pages
         self._free: List[int] = list(range(num_pages - 1, NULL_PAGE, -1))
-        self._allocated: set = set()
+        self._refs: Dict[int, int] = {}
 
     @property
     def free_count(self) -> int:
@@ -50,7 +56,11 @@ class PageAllocator:
 
     @property
     def used_count(self) -> int:
-        return len(self._allocated)
+        """Distinct live pages (shared pages count once — the dedup metric)."""
+        return len(self._refs)
+
+    def ref_count(self, page: int) -> int:
+        return self._refs.get(page, 0)
 
     def alloc(self, n: int) -> Optional[List[int]]:
         if n < 0:
@@ -58,15 +68,24 @@ class PageAllocator:
         if n > len(self._free):
             return None
         pages = [self._free.pop() for _ in range(n)]
-        self._allocated.update(pages)
+        for pg in pages:
+            self._refs[pg] = 1
         return pages
 
+    def incref(self, page: int) -> None:
+        if page == NULL_PAGE or page not in self._refs:
+            raise ValueError(f"incref on unallocated page {page}")
+        self._refs[page] += 1
+
     def free(self, pages: List[int]) -> None:
+        """Drop one hold per page; recycle pages whose last hold dropped."""
         for pg in pages:
-            if pg == NULL_PAGE or pg not in self._allocated:
+            if pg == NULL_PAGE or pg not in self._refs:
                 raise ValueError(f"freeing unallocated page {pg}")
-            self._allocated.remove(pg)
-            self._free.append(pg)
+            self._refs[pg] -= 1
+            if self._refs[pg] == 0:
+                del self._refs[pg]
+                self._free.append(pg)
 
 
 @dataclasses.dataclass

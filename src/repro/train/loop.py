@@ -83,25 +83,51 @@ def train_loop(step_fn: Callable, state: Any, data: SyntheticPipeline,
 
     monitor = StepMonitor(cfg, _abort)
     history = []
+    # metrics stay ON DEVICE for one step: float()-ing the CURRENT step's
+    # metrics forces a host sync that serializes async dispatch (the device
+    # drains before the next step is enqueued). Instead each step syncs on
+    # the PREVIOUS step's metrics — the device always has this step queued
+    # behind the wait, so dispatch stays async, while dt still measures real
+    # device step time (attributed one step late) and the straggler EWMA and
+    # deadline watchdog keep watching actual compute, not dispatch.
+    pending = []                        # (history index, device metrics)
+
+    def _materialize(upto=None):
+        while pending and (upto is None or pending[0][0] <= upto):
+            idx, m = pending.pop(0)
+            history[idx].update(
+                jax.tree.map(lambda x: float(np.asarray(x)), m))
+
     it = data.iterator(start_step=start_step)
     for step in range(start_step, cfg.max_steps):
         batch = next(it)
         monitor.step_started()
         t0 = time.perf_counter()
         state, metrics = step_fn(state, batch)
-        metrics = jax.tree.map(lambda x: float(np.asarray(x)), metrics)
+        history.append({"step": step, "dt": 0.0})
+        pending.append((len(history) - 1, metrics))
+        _materialize(upto=len(history) - 2)   # pipeline-depth-1 sync
         dt = time.perf_counter() - t0
+        history[-1]["dt"] = dt
         straggler = monitor.step_finished(dt)
-        history.append({"step": step, "dt": dt, **metrics})
         if straggler:
             log(f"[monitor] step {step} straggled: {dt:.3f}s vs EWMA "
                 f"{monitor.ewma:.3f}s")
-        if step % cfg.log_every == 0:
-            log(f"step {step:5d} loss={metrics.get('loss', float('nan')):.4f} "
-                f"acc={metrics.get('accuracy', 0.0):.3f} {dt*1e3:.0f}ms")
+        if step % cfg.log_every == 0 or straggler:
+            # log the newest COMPLETED step: flushing the in-flight one here
+            # would leave the next step nothing to wait on, so its dt would
+            # time bare dispatch and skew the straggler EWMA every interval
+            if len(history) == 1:
+                _materialize()          # very first line: one-time sync
+            done = history[-1] if len(history) == 1 else history[-2]
+            log(f"step {done['step']:5d} "
+                f"loss={done.get('loss', float('nan')):.4f} "
+                f"acc={done.get('accuracy', 0.0):.3f} "
+                f"{done['dt']*1e3:.0f}ms")
         if ckpt and (step + 1) % cfg.ckpt_every == 0:
             ckpt.save_async(step + 1, state,
                             extra={"data_step": step + 1})
+    _materialize()
     if ckpt:
         ckpt.wait()
         ckpt.save(cfg.max_steps, state, extra={"data_step": cfg.max_steps})

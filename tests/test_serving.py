@@ -59,6 +59,26 @@ def test_allocator_rejects_double_free_and_null_page():
         a.free([NULL_PAGE])
 
 
+def test_allocator_refcounts_shared_pages():
+    """A page shared N ways is stored once and survives until the last hold
+    drops — the memory dedup prefix caching is built on."""
+    a = PageAllocator(8)
+    (pg,) = a.alloc(1)
+    a.incref(pg)
+    a.incref(pg)                               # three holds
+    assert a.ref_count(pg) == 3
+    assert a.used_count == 1                   # stored once
+    a.free([pg])
+    a.free([pg])
+    assert a.used_count == 1 and a.free_count == 6   # still held
+    a.free([pg])
+    assert a.used_count == 0 and a.free_count == 7   # last hold: recycled
+    with pytest.raises(ValueError):
+        a.free([pg])
+    with pytest.raises(ValueError):
+        a.incref(pg)                           # can't share a dead page
+
+
 def test_pages_needed():
     assert pages_needed(1, 16) == 1
     assert pages_needed(16, 16) == 1
@@ -103,17 +123,54 @@ def test_scheduler_slot_recycling():
 
 
 def test_scheduler_page_growth_and_preemption():
-    # one page of headroom: growing the older sequence must preempt the newer
-    s = Scheduler(num_slots=2, num_pages=7, page_size=4, max_pages_per_seq=8)
+    # admission leaves exactly one page of headroom (anti-thrash rule); once
+    # growth burns it, growing the older sequence must preempt the newer
+    s = Scheduler(num_slots=2, num_pages=8, page_size=4, max_pages_per_seq=8)
     s.submit(_req(0, plen=8, gen=16))          # 3 pages
-    s.submit(_req(1, plen=8, gen=16))          # 3 pages
+    s.submit(_req(1, plen=8, gen=16))          # 3 pages + 1 headroom
     s0, s1 = s.admit_next(), s.admit_next()
-    assert s.allocator.free_count == 0
+    assert s0 is not None and s1 is not None
+    assert s.allocator.free_count == 1
     s.cache.seq_lens[s0.slot] = 12             # slot 0 full: next token -> page 4
+    assert s.ensure_capacity() == []           # headroom page absorbs growth
+    assert s.cache.allocated_pages(s0.slot) == 4
+    s.cache.seq_lens[s0.slot] = 16             # full again: next -> page 5
     preempted = s.ensure_capacity()
     assert [p.request.uid for p in preempted] == [1]
     assert s.queue[0].uid == 1                 # requeued at the front
-    assert s.cache.allocated_pages(s0.slot) == 4
+    assert s.cache.allocated_pages(s0.slot) == 5
+
+
+def test_scheduler_headroom_blocks_zero_slack_admission():
+    """With sequences already running, admission must leave >= 1 free page —
+    a zero-slack admit would be the first preemption victim the moment any
+    neighbour grows (admit/preempt thrash)."""
+    s = Scheduler(num_slots=2, num_pages=7, page_size=4, max_pages_per_seq=8)
+    s.submit(_req(0, plen=8, gen=16))          # 3 pages, nothing running: ok
+    s.submit(_req(1, plen=8, gen=16))          # would leave 0 free: refused
+    s0 = s.admit_next()
+    assert s0 is not None
+    assert s.admit_next() is None
+    assert s.allocator.free_count == 3         # refused admit took nothing
+    s.finish(s0)
+    assert s.admit_next().request.uid == 1     # pool empty again: admitted
+
+
+def test_scheduler_rejects_oversized_request_and_keeps_serving():
+    """A context that can never fit in max_pages_per_seq must fail that one
+    request (surfaced via take_rejected), not raise and kill the engine."""
+    s = Scheduler(num_slots=2, num_pages=64, page_size=4, max_pages_per_seq=4)
+    s.submit(_req(0, plen=8))
+    s.submit(_req(1, plen=40))                 # 11 pages > 4: impossible
+    s.submit(_req(2, plen=8))
+    a = s.admit_next()
+    assert a is not None and a.request.uid == 0
+    b = s.admit_next()                         # skips over the doomed request
+    assert b is not None and b.request.uid == 2
+    assert [r.uid for r in s.take_rejected()] == [1]
+    assert s.take_rejected() == []             # drained
+    s.finish(a), s.finish(b)
+    assert s.allocator.used_count == 0
 
 
 # ------------------------------------------------------------------ e2e parity ---
@@ -169,7 +226,9 @@ def test_continuous_matches_static_greedy(name):
 
 def test_continuous_matches_static_under_recycling_and_preemption():
     """slots < requests and a page pool too small for all of them: recycling
-    and recompute-preemption must not change a single greedy token."""
+    and recompute-preemption must not change a single greedy token.
+    (prefix_cache off so the drained pool is exactly empty — the index would
+    deliberately retain pages.)"""
     arch, model, params = _fp32_model("llama3.2-3b")
     rng = np.random.default_rng(7)
     prompts = [list(map(int, rng.integers(5, arch.vocab_size, 12)))
@@ -178,13 +237,119 @@ def test_continuous_matches_static_under_recycling_and_preemption():
     ref = _static_greedy(model, params, prompts, gens)
 
     engine = ContinuousEngine(model, params, num_slots=2, num_pages=10,
-                              page_size=4, max_seq_len=32)
+                              page_size=4, max_seq_len=32,
+                              prefix_cache=False)
     res = engine.run([Request(uid=i, prompt=prompts[i], max_new_tokens=gens[i])
                       for i in range(5)])
     for i in range(5):
         assert res[i]["tokens"] == ref[i], f"request {i} diverged"
     assert engine.prefills > 5                 # preemption actually happened
     assert engine.scheduler.allocator.used_count == 0
+
+
+def test_overlong_prompt_gets_error_result_not_engine_death():
+    """Regression: one request whose context exceeds max_pages_per_seq used
+    to raise out of admit_next mid-trace, killing every in-flight request.
+    It must come back as an error result while the rest serve normally."""
+    arch, model, params = _fp32_model("llama3.2-3b")
+    rng = np.random.default_rng(11)
+    ok_prompts = [list(map(int, rng.integers(5, arch.vocab_size, 10)))
+                  for _ in range(2)]
+    ref = _static_greedy(model, params, ok_prompts, [5, 7])
+    engine = ContinuousEngine(model, params, num_slots=2, num_pages=32,
+                              page_size=8, max_seq_len=32)   # 4 pages/seq
+    reqs = [Request(uid=0, prompt=ok_prompts[0], max_new_tokens=5),
+            Request(uid=1, prompt=list(range(5, 5 + 40)),    # needs 6 pages
+                    max_new_tokens=5),
+            Request(uid=2, prompt=ok_prompts[1], max_new_tokens=7)]
+    res = engine.run(reqs)
+    assert "error" in res[1] and res[1]["tokens"] == []
+    assert res[0]["tokens"] == ref[0]
+    assert res[2]["tokens"] == ref[1]
+
+
+def test_generation_outgrowing_max_seq_len_truncates_not_crashes():
+    """Regression: a prompt that fits but whose max_new_tokens would outgrow
+    the page table used to die mid-trace in append_page ('page table full'),
+    discarding every in-flight request. It must truncate at cache capacity
+    and the other requests must be untouched."""
+    arch, model, params = _fp32_model("llama3.2-3b")
+    rng = np.random.default_rng(19)
+    big = list(map(int, rng.integers(5, arch.vocab_size, 16)))
+    ok = list(map(int, rng.integers(5, arch.vocab_size, 8)))
+    ref_ok = _static_greedy(model, params, [ok], [5])[0]
+    engine = ContinuousEngine(model, params, num_slots=2, num_pages=32,
+                              page_size=8, max_seq_len=32)   # 32-token cap
+    res = engine.run([Request(uid=0, prompt=big, max_new_tokens=40),
+                      Request(uid=1, prompt=ok, max_new_tokens=5)])
+    assert len(res[0]["tokens"]) == 32 - 16        # truncated at capacity
+    assert res[1]["tokens"] == ref_ok
+    assert engine.live_kv_tokens == 0
+
+
+def test_admission_headroom_bounds_reprefills():
+    """Regression for admit/preempt thrash: with a pool where the second
+    request fits only with zero slack, the old scheduler admitted it, paid
+    its prefill, then chose it as the preemption victim as soon as the first
+    sequence grew — re-prefilling on a loop. With admission headroom, total
+    prefill completions stay at (admissions + genuine preemptions)."""
+    arch, model, params = _fp32_model("llama3.2-3b")
+    rng = np.random.default_rng(13)
+    prompts = [list(map(int, rng.integers(5, arch.vocab_size, 8)))
+               for _ in range(2)]
+    gens = [16, 16]
+    ref = _static_greedy(model, params, prompts, gens)
+    engine = ContinuousEngine(model, params, num_slots=2, num_pages=10,
+                              page_size=4, max_seq_len=32,
+                              prefix_cache=False)
+    res = engine.run([Request(uid=i, prompt=prompts[i], max_new_tokens=gens[i])
+                      for i in range(2)])
+    for i in range(2):
+        assert res[i]["tokens"] == ref[i], f"request {i} diverged"
+    # 2 admissions + at most one growth-driven preemption/re-admission; the
+    # thrash regression showed up as a prefill per crossed page boundary
+    assert engine.prefills <= 3
+
+
+def test_preempted_midprefill_sequence_readmits_instead_of_stalling():
+    """Regression: preempting a sequence that is mid-prefill left its stale
+    entry gating admission (the prefix-cache serialized-admission gate); if
+    the other sequence finished on that same iteration the engine saw
+    {nothing running, non-empty queue} and raised 'queue stalled' for a
+    perfectly admittable request. Forces exactly that interleaving: the
+    victim must simply be re-admitted and complete."""
+    arch, model, params = _fp32_model("llama3.2-3b")
+    rng = np.random.default_rng(17)
+    # timing: uid0 (8-tok prompt, 4-tok chunks) prefills over iterations 1-2
+    # and decodes from iteration 2; uid1 is admitted at iteration 3 and is
+    # mid-prefill there, which is exactly when uid0's final decode runs
+    prompts = [list(map(int, rng.integers(5, arch.vocab_size, 8))),
+               list(map(int, rng.integers(5, arch.vocab_size, 12)))]
+    gens = [3, 3]
+    ref = _static_greedy(model, params, prompts, gens)
+    engine = ContinuousEngine(model, params, num_slots=2, num_pages=32,
+                              page_size=4, max_seq_len=48,
+                              prefix_cache=True, prefill_chunk=4)
+    sched = engine.scheduler
+    orig = sched.ensure_capacity
+    forced = []
+
+    def force_preempt_midprefill():
+        out = orig()
+        victim = next((s for s in sched.running.values()
+                       if s.prefilled < s.prefill_target), None)
+        if not forced and victim is not None and len(sched.running) > 1:
+            sched._preempt(victim)      # simulated pool pressure
+            out.append(victim)
+            forced.append(victim.request.uid)
+        return out
+
+    sched.ensure_capacity = force_preempt_midprefill
+    res = engine.run([Request(uid=i, prompt=prompts[i],
+                              max_new_tokens=gens[i]) for i in range(2)])
+    assert forced == [1], "scenario must actually fire"
+    for i in range(2):
+        assert res[i]["tokens"] == ref[i], f"request {i} diverged"
 
 
 def test_eos_stops_generation_early():

@@ -123,3 +123,48 @@ def test_training_learns_end_to_end():
     losses = [h["loss"] for h in out["history"]]
     assert losses[-1] < losses[0]
     assert all(jnp.isfinite(jnp.asarray(losses)))
+
+
+def test_train_loop_keeps_one_step_in_flight():
+    """The current step's metrics must never be synced inside its own step
+    (that serializes async dispatch — the device drains before the next step
+    is enqueued); the loop syncs with pipeline depth 1, so step N's metrics
+    materialize only after step N+1 has been dispatched — yet the returned
+    history still carries plain-float metrics for every step."""
+    from repro.data import DataConfig, SyntheticPipeline
+    from repro.train.loop import LoopConfig, train_loop
+
+    events = []
+
+    class DeviceMetric:
+        """Stands in for a device array; records when it's materialized."""
+        def __init__(self, step):
+            self.step = step
+
+        def __array__(self, dtype=None):
+            events.append(("sync", self.step))
+            return jnp.asarray(float(self.step) + 0.5).__array__(dtype)
+
+    def step_fn(state, batch):
+        events.append(("dispatch", state))
+        return state + 1, {"loss": DeviceMetric(state)}
+
+    data = SyntheticPipeline(DataConfig(vocab_size=50, seq_len=8,
+                                        global_batch=2))
+    # huge straggler_factor: instant fake steps have wild dt ratios, and a
+    # straggler is a sanctioned eager-flush boundary that would mask the lag
+    cfg = LoopConfig(max_steps=10, log_every=4, ckpt_every=10**9,
+                     straggler_factor=1e9)
+    out = train_loop(step_fn, 0, data, cfg, log=lambda s: None)
+    # every entry materialized by the end, values intact
+    assert [h["loss"] for h in out["history"]] == \
+        [s + 0.5 for s in range(10)]
+    assert all(isinstance(h["loss"], float) for h in out["history"])
+    # depth-1 pipeline: a step's metrics are synced only after the next step
+    # was dispatched (log boundaries report the previous, completed step;
+    # only the very first log line syncs its own step)
+    order = {e: i for i, e in enumerate(events)}
+    for s in range(1, 9):
+        assert order[("sync", s)] > order[("dispatch", s + 1)], \
+            f"step {s} synced inside its own step"
+    assert order[("sync", 9)] > order[("dispatch", 9)]   # end-of-loop flush
