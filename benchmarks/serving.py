@@ -15,6 +15,11 @@ With it on, the shared prompt's K/V pages are computed once and refcounted
 into every request's page table, so prefill tokens computed, time-to-first-
 token, and peak pages-in-use all drop.
 
+The third section prices stochastic decoding: the same trace served greedy
+and with per-request temperature/top-k/top-p (chat-shaped traffic), so the
+on-device sampler's overhead — two [slots, vocab] sorts plus the categorical
+draw per step — shows up as a tok/s delta instead of a guess.
+
     PYTHONPATH=src python -m benchmarks.serving [--arch llama3.2-3b] \
         [--json serving_bench.json]
 
@@ -34,7 +39,8 @@ import numpy as np
 
 from repro.configs import smoke_config
 from repro.models import build_model
-from repro.serving import ContinuousEngine, Request, pages_needed
+from repro.serving import (ContinuousEngine, Request, SamplingParams,
+                           pages_needed)
 
 from .common import emit
 
@@ -111,6 +117,10 @@ def run_static(model, params, requests, batch_size):
 
 
 def run_continuous(model, params, requests, slots, *, prefix_cache=False):
+    """Serve ``requests`` through one ContinuousEngine sized for the trace.
+    Returns (uid -> token_times, full results dict, wall seconds, engine) —
+    every section (rates / shared-prefix / sampled) goes through here so the
+    pool-sizing math lives in exactly one place."""
     max_seq = max(len(r.prompt) + r.max_new_tokens for r in requests)
     num_pages = slots * pages_needed(max_seq + 1, PAGE_SIZE) + 2
     engine = ContinuousEngine(model, params, num_slots=slots,
@@ -120,7 +130,8 @@ def run_continuous(model, params, requests, slots, *, prefix_cache=False):
     t0 = time.perf_counter()
     results = engine.run(requests)
     wall = time.perf_counter() - t0
-    return {uid: r["token_times"] for uid, r in results.items()}, wall, engine
+    times = {uid: r["token_times"] for uid, r in results.items()}
+    return times, results, wall, engine
 
 
 def summarize(token_times, wall):
@@ -147,7 +158,7 @@ def run_rates(model, params, n_requests, slots, rates, results):
         tag = "inf" if np.isinf(rate) else f"{rate:g}"
         st_times, st_wall = run_static(model, params, trace, slots)
         st = summarize(st_times, st_wall)
-        ct_times, ct_wall, _ = run_continuous(model, params, trace, slots)
+        ct_times, _, ct_wall, _ = run_continuous(model, params, trace, slots)
         ct = summarize(ct_times, ct_wall)
         emit(f"serve_static_rate{tag}", st_wall * 1e6 / max(1, n_requests),
              f"{st['tok_s']:.1f}tok/s_p50={st['p50_ms']:.1f}ms_"
@@ -167,8 +178,8 @@ def run_shared_prefix(model, params, n_requests, slots, results):
     trace = make_shared_prefix_trace(n_requests)
     out = {}
     for prefix_cache in (False, True):
-        times, wall, engine = run_continuous(model, params, trace, slots,
-                                             prefix_cache=prefix_cache)
+        times, _, wall, engine = run_continuous(model, params, trace, slots,
+                                                prefix_cache=prefix_cache)
         tag = "on" if prefix_cache else "off"
         out[tag] = {
             **summarize(times, wall),
@@ -194,6 +205,39 @@ def run_shared_prefix(model, params, n_requests, slots, results):
     results["shared_prefix"] = out
 
 
+def run_sampled(model, params, n_requests, slots, results):
+    """Same trace served greedy vs sampled (per-request temperature/top-k/
+    top-p, seed = uid): tok/s and inter-token latency for both, the sampler's
+    relative overhead, and how many streams actually diverged from greedy
+    (at these settings nearly all should)."""
+    base = make_trace(n_requests, float("inf"))
+    sampled = [Request(uid=r.uid, prompt=r.prompt,
+                       max_new_tokens=r.max_new_tokens, arrival=r.arrival,
+                       sampling=SamplingParams(temperature=0.8, top_k=40,
+                                               top_p=0.95, seed=r.uid))
+               for r in base]
+    out = {}
+    tokens = {}
+    for tag, trace in (("greedy", base), ("sampled", sampled)):
+        times, res, wall, _ = run_continuous(model, params, trace, slots,
+                                             prefix_cache=True)
+        tokens[tag] = {uid: r["tokens"] for uid, r in res.items()}
+        out[tag] = summarize(times, wall)
+        emit(f"serve_{tag}_decode", wall * 1e6 / max(1, n_requests),
+             f"{out[tag]['tok_s']:.1f}tok/s_p50={out[tag]['p50_ms']:.1f}ms")
+    out["sampler_overhead_pct"] = 100.0 * (
+        out["greedy"]["tok_s"] / max(out["sampled"]["tok_s"], 1e-9) - 1.0)
+    out["diverged_requests"] = sum(
+        1 for uid in tokens["greedy"]
+        if tokens["greedy"][uid] != tokens["sampled"][uid])
+    print(f"[serving] sampled trace ({n_requests} requests, temp=0.8 "
+          f"top_k=40 top_p=0.95): greedy {out['greedy']['tok_s']:.1f} tok/s "
+          f"vs sampled {out['sampled']['tok_s']:.1f} tok/s "
+          f"({out['sampler_overhead_pct']:.1f}% sampler overhead), "
+          f"{out['diverged_requests']}/{n_requests} streams diverged")
+    results["sampled"] = out
+
+
 def run(arch_name="llama3.2-3b", n_requests=16, slots=4,
         rates=(4.0, 16.0, float("inf")), json_path=None) -> dict:
     arch = smoke_config(arch_name)
@@ -205,6 +249,7 @@ def run(arch_name="llama3.2-3b", n_requests=16, slots=4,
                "backend": jax.default_backend(), "rates": {}}
     run_rates(model, params, n_requests, slots, rates, results)
     run_shared_prefix(model, params, n_requests, slots, results)
+    run_sampled(model, params, n_requests, slots, results)
     if json_path:
         with open(json_path, "w") as f:
             json.dump(results, f, indent=2)

@@ -9,8 +9,12 @@ continuous  ``repro.serving.ContinuousEngine``: paged KV cache + scheduler —
             refcounted prefix cache (``--no-prefix-cache`` to disable), and
             live KV memory tracks actual generated lengths.
 
-Both engines are greedy at ``--temperature 0`` and produce identical token
-ids for the same prompts (tested in tests/test_serving.py).
+Sampling (``--temperature/--top-k/--top-p/--seed``) is valid for BOTH
+engines: request ``i`` gets ``SamplingParams(seed = --seed + i)`` and both
+paths draw from the shared ``repro.serving.sampling`` sampler, whose PRNG
+key is ``fold_in(key(seed), position)`` — so the two engines emit identical
+token ids for the same prompts at any temperature, not just greedy
+(tested in tests/test_serving.py and tests/test_sampling.py).
 
 ``python -m repro.launch.serve --arch llama3.2-3b --smoke --engine continuous``
 """
@@ -25,6 +29,22 @@ import numpy as np
 
 from ..configs import get_config, smoke_config
 from ..models import build_model
+from ..serving.sampling import SamplingParams, sample_tokens
+
+
+def _request_seed(args, i: int) -> int:
+    """Request i is seeded ``--seed + i`` (mod 2^32 — the sampler's key
+    width) in BOTH engines, which is what makes their streams comparable."""
+    return (args.seed + i) % (2 ** 32)
+
+
+def _sampling_arrays(args, batch):
+    """Per-request sampler inputs for the static path."""
+    return (jnp.asarray([_request_seed(args, i) for i in range(batch)],
+                        jnp.uint32),
+            jnp.full((batch,), args.temperature, jnp.float32),
+            jnp.full((batch,), args.top_k, jnp.int32),
+            jnp.full((batch,), args.top_p, jnp.float32))
 
 
 def _run_static(model, params, args, arch) -> dict:
@@ -41,26 +61,38 @@ def _run_static(model, params, args, arch) -> dict:
 
     prefill = jax.jit(model.prefill)
     decode = jax.jit(model.decode_step, donate_argnums=(1,))
+    if args.temperature > 0:
+        filtered = args.top_k > 0 or args.top_p < 1.0
+        sample = jax.jit(sample_tokens, static_argnames=("filtered",))
+        seeds, temps, top_ks, top_ps = _sampling_arrays(args, b)
+
+        def pick(logits, pos):
+            # the sampler folds each request's stream position into its key,
+            # matching the continuous engine draw for draw
+            return sample(logits, seeds, jnp.full((b,), pos, jnp.int32),
+                          temps, top_ks, top_ps, filtered=filtered)
+    else:
+        # greedy stays a pure argmax — no sampler sorts/keys on the default
+        # path (bit-identical by the sampler's temperature-0 contract, and
+        # the same specialization the continuous engine's static flag does)
+        def pick(logits, pos):
+            return jnp.argmax(logits, axis=-1)
 
     t0 = time.perf_counter()
     logits, caches = prefill(params, caches, batch)
     logits.block_until_ready()
     t_prefill = time.perf_counter() - t0
 
-    tokens = jnp.argmax(logits[:, -1], axis=-1)
+    # the prompt's next token sits at stream position plen; each decode step
+    # i then emits position plen + 1 + i
+    tokens = pick(logits[:, -1], plen)
     generated = [tokens]
-    key = jax.random.key(args.seed + 7)
     t0 = time.perf_counter()
     for i in range(glen - 1):
         db = {"tokens": tokens[:, None],
               "positions": jnp.full((b,), plen + i, jnp.int32)}
         logits, caches = decode(params, caches, db)
-        if args.temperature > 0:
-            key, sub = jax.random.split(key)
-            tokens = jax.random.categorical(
-                sub, logits[:, -1] / args.temperature, axis=-1)
-        else:
-            tokens = jnp.argmax(logits[:, -1], axis=-1)
+        tokens = pick(logits[:, -1], plen + 1 + i)
         generated.append(tokens)
     jax.block_until_ready(generated[-1])
     t_decode = time.perf_counter() - t0
@@ -78,7 +110,6 @@ def _run_continuous(model, params, args, arch) -> dict:
     from ..serving import ContinuousEngine, Request, pages_needed
 
     b, plen, glen = args.batch, args.prompt_len, args.gen_len
-    assert args.temperature == 0, "continuous engine is greedy-only for now"
     prompt = np.asarray(jax.random.randint(jax.random.key(1), (b, plen), 5,
                                            arch.vocab_size))
     max_seq = plen + glen
@@ -90,7 +121,12 @@ def _run_continuous(model, params, args, arch) -> dict:
                               prefix_cache=args.prefix_cache,
                               prefill_chunk=args.prefill_chunk or None)
     reqs = [Request(uid=i, prompt=[int(t) for t in prompt[i]],
-                    max_new_tokens=glen) for i in range(b)]
+                    max_new_tokens=glen,
+                    sampling=SamplingParams(temperature=args.temperature,
+                                            top_k=args.top_k,
+                                            top_p=args.top_p,
+                                            seed=_request_seed(args, i)))
+            for i in range(b)]
     t0 = time.perf_counter()
     results = engine.run(reqs)
     wall = time.perf_counter() - t0
@@ -118,8 +154,17 @@ def main(argv=None) -> dict:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=32)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--seed", type=int, default=0)
+    # sampling (both engines; request i is seeded --seed + i)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy argmax; > 0 scales logits before the "
+                         "categorical draw")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="keep only the k highest logits (0 = disabled)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass in (0, 1] (1.0 = disabled)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base PRNG seed: params init + per-request "
+                         "sampling seeds (--seed + request index)")
     # continuous-engine knobs
     ap.add_argument("--slots", type=int, default=0,
                     help="decode slots (default: --batch)")
@@ -134,6 +179,16 @@ def main(argv=None) -> dict:
                     help="chunked-prefill tokens per step, a page multiple "
                          "(default: 4 pages)")
     args = ap.parse_args(argv)
+    # one validation for BOTH engines (the static path reads raw args, so
+    # without this it would silently reinterpret e.g. --top-p 0)
+    try:
+        sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                            top_p=args.top_p, seed=args.seed)
+    except ValueError as e:
+        ap.error(str(e))
+    if sp.greedy and sp.filtered:
+        ap.error("--top-k/--top-p have no effect at --temperature 0 "
+                 "(greedy argmax); set --temperature > 0 to sample")
 
     arch = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     assert not arch.bidirectional, "encoder-only archs have no decode step"

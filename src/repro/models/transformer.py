@@ -315,12 +315,24 @@ def paged_prefill_period(arch: ArchConfig, p: PyTree, cache: PyTree,
     return x, new_cache
 
 
+def chunk_final_hidden(x: jax.Array, start: jax.Array,
+                       total_len: jax.Array) -> jax.Array:
+    """[B, C, D] chunk activations -> [B, 1, D] hidden state of the chunk's
+    last *valid* token (position ``total_len - 1``; the chunk is padded past
+    it). This is the logits surface for the final prefill chunk: the LM head
+    + sampler run on exactly this one position — earlier chunks exist only
+    to fill KV pages and never pay the head."""
+    return jax.lax.dynamic_slice_in_dim(x, total_len - 1 - start, 1, axis=1)
+
+
 def paged_prefill_stack(arch: ArchConfig, stacked: PyTree, caches: PyTree,
                         x: jax.Array, page_row: jax.Array, start: jax.Array,
                         total_len: jax.Array, mrope_positions=None
                         ) -> Tuple[jax.Array, PyTree]:
     """Chunked prefill: one prompt chunk [1, C, D] of one sequence through
-    the stack, K/V written straight into the sequence's pages."""
+    the stack, K/V written straight into the sequence's pages. The caller
+    slices the sampling position out of the returned activations with
+    ``chunk_final_hidden``."""
     if isinstance(stacked, dict) and any(k.startswith("period_") for k in stacked):
         new_caches: PyTree = {}
         for z in range(len(stacked)):

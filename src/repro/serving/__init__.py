@@ -2,10 +2,14 @@
 
 - ``kv_cache``  : refcounted page-pool allocator + per-slot page-table/length
                   state (shared prefix pages are stored once)
+- ``sampling``  : per-request ``SamplingParams`` and the shared on-device
+                  sampler (temperature / top-k / top-p, (seed, position)
+                  PRNG keys) both engines draw tokens from
 - ``scheduler`` : request queue, admission by free-page count with anti-thrash
                   headroom, radix prefix index (page-aligned sharing + CoW
-                  tails, LRU eviction), slot recycling, recompute-preemption
-                  on pool pressure
+                  tails, LRU eviction), slot recycling, forced-replay
+                  preemption on pool pressure (token-identical resume under
+                  any sampling setting)
 - ``engine``    : ``ContinuousEngine`` — fixed-shape jitted chunked-prefill /
                   decode steps driven by the scheduler, so requests join and
                   leave mid-flight without recompilation and long prompts
@@ -13,8 +17,9 @@
 """
 from .engine import ContinuousEngine
 from .kv_cache import PageAllocator, PagedCacheState, pages_needed
+from .sampling import SamplingParams, sample_tokens
 from .scheduler import PrefixIndex, Request, Scheduler, SequenceState
 
 __all__ = ["ContinuousEngine", "PageAllocator", "PagedCacheState",
-           "PrefixIndex", "pages_needed", "Request", "Scheduler",
-           "SequenceState"]
+           "PrefixIndex", "pages_needed", "Request", "SamplingParams",
+           "sample_tokens", "Scheduler", "SequenceState"]

@@ -1,5 +1,5 @@
-"""ContinuousEngine: greedy serving with continuous batching, prefix caching,
-and chunked prefill.
+"""ContinuousEngine: sampling-capable serving with continuous batching,
+prefix caching, and chunked prefill.
 
 Shapes the compiler sees are fixed — decode always runs the full
 ``num_slots`` batch against the same page pools and a [num_slots, max_pages]
@@ -19,9 +19,18 @@ matching tail page is copied on divergence — the engine's CoW device copy),
 and only the unmatched suffix is chunk-prefilled. Under shared system
 prompts this removes most prefill FLOPs *and* most prefill HBM writes.
 
-The engine is deliberately greedy-only: parity with the static engine
-(``repro.launch.serve --engine static``) must be exact, and greedy decode is
-what makes recompute-preemption lossless.
+Token selection is the shared on-device sampler (``serving.sampling``):
+each request carries ``SamplingParams`` (temperature / top-k / top-p /
+seed), and the key for the token at stream position p is
+``fold_in(key(seed), p)`` — independent of the slot the request landed in,
+of its co-batched neighbours, and of whether the token came from a decode
+step or the final chunk of a (re-)prefill. At ``temperature == 0`` the
+sampler short-circuits to raw argmax, bit-identical to the historical
+greedy engine, and preemption is *forced replay* either way: a victim's
+prompt + generated tokens are re-prefilled as forced context, so the resumed
+stream is token-identical under any sampling setting (the invariant
+``tests/test_sampling.py`` pins, including mid-prefill and CoW-tail
+preemptions).
 """
 from __future__ import annotations
 
@@ -36,6 +45,7 @@ import numpy as np
 from ..models import transformer as tf
 from ..models.model import Model
 from .kv_cache import pages_needed
+from .sampling import sample_tokens
 from .scheduler import Request, Scheduler, SequenceState
 
 SERVABLE_FAMILIES = ("dense", "moe", "vlm")
@@ -81,41 +91,71 @@ class ContinuousEngine:
         # call copies every layer's [P, page, Hkv, D] pool to update a few rows
         self._donate_pools = jax.default_backend() in ("tpu", "gpu")
         donate = (1,) if self._donate_pools else ()
-        self._decode = jax.jit(self._decode_impl, donate_argnums=donate)
+        self._decode = jax.jit(self._decode_impl, donate_argnums=donate,
+                               static_argnames=("sampled", "filtered"))
         self._prefill = jax.jit(self._prefill_impl, donate_argnums=donate,
-                                static_argnames=("final",))
+                                static_argnames=("final", "sampled",
+                                                 "filtered"))
         self._copy_page = jax.jit(     # pools are argument 0 here, not 1
             self._copy_page_impl,
             donate_argnums=(0,) if self._donate_pools else ())
+        # the compiled all-greedy decode variant never reads the sampling
+        # arrays; ship these cached placeholders instead of rebuilding and
+        # re-transferring five [S] arrays every step of the default path
+        self._null_sampling = (
+            jnp.zeros((num_slots,), jnp.uint32),    # seeds
+            jnp.zeros((num_slots,), jnp.int32),     # positions
+            jnp.zeros((num_slots,), jnp.float32),   # temperatures
+            jnp.zeros((num_slots,), jnp.int32),     # top_k
+            jnp.ones((num_slots,), jnp.float32),    # top_p
+        )
 
     # ------------------------------------------------------------- jitted fns ---
-    def _decode_impl(self, params, pools, page_table, seq_lens, tokens):
-        """tokens [S] -> (greedy next token [S], new pools). S == num_slots.
+    def _decode_impl(self, params, pools, page_table, seq_lens, tokens,
+                     seeds, positions, temps, top_ks, top_ps, *, sampled,
+                     filtered):
+        """tokens [S] -> (next token [S], new pools). S == num_slots.
 
-        The argmax stays on device: the engine is greedy-only, so shipping
-        [S, vocab] logits to the host every step would be pure transfer waste.
-        """
+        Selection stays on device — greedy slots take a raw argmax, sampled
+        slots a per-slot (seed, position)-keyed categorical draw — so only
+        the [S] token vector ever crosses to the host, never [S, vocab]
+        logits. ``sampled``/``filtered`` are static: an all-greedy step
+        compiles to a pure argmax (today's default traffic pays zero sampler
+        work — no [S, vocab] sorts, no key fold-ins), temperature-only
+        batches skip the two filter sorts, and each extra variant compiles
+        only once the matching traffic shows up."""
         x = self.model._embed(params, tokens[:, None])
         x, pools = tf.paged_decode_stack(self.arch, params["blocks"], pools,
                                          x, page_table, seq_lens)
         logits = self.model._logits(params, x)[:, 0]
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32), pools
+        if not sampled:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), pools
+        return sample_tokens(logits, seeds, positions, temps, top_ks,
+                             top_ps, filtered=filtered), pools
 
-    def _prefill_impl(self, params, pools, tokens, page_row, start, total, *,
-                      final):
+    def _prefill_impl(self, params, pools, tokens, page_row, start, total,
+                      seed, temp, top_k, top_p, *, final, sampled, filtered):
         """One prompt chunk of one sequence. tokens [1, C] (padded past
-        ``total - start`` valid tokens) -> (greedy token after the chunk's
-        last valid token [scalar], new pools). One compiled shape (two
-        variants: only the final chunk pays the LM-head pass — earlier
-        chunks exist to fill pages, their logits would be discarded)."""
+        ``total - start`` valid tokens) -> (token after the chunk's last
+        valid token [scalar], new pools). One compiled shape (variants on
+        the static flags only: non-final chunks exist to fill pages and skip
+        the LM head entirely; a final chunk pays the head plus either a raw
+        argmax or the sampler, like ``_decode_impl``). The emitted token's
+        stream position is ``total``, so its sampling key matches the decode
+        step that would have produced it in an uninterrupted run — the
+        forced-replay invariant."""
         x = self.model._embed(params, tokens)
         x, pools = tf.paged_prefill_stack(self.arch, params["blocks"], pools,
                                           x, page_row, start, total)
         if not final:
             return jnp.zeros((), jnp.int32), pools
-        xl = jax.lax.dynamic_slice_in_dim(x, total - 1 - start, 1, axis=1)
+        xl = tf.chunk_final_hidden(x, start, total)
         logits = self.model._logits(params, xl)[:, 0]
-        return jnp.argmax(logits[0], axis=-1).astype(jnp.int32), pools
+        if not sampled:
+            return jnp.argmax(logits[0], axis=-1).astype(jnp.int32), pools
+        tok = sample_tokens(logits, seed[None], total[None], temp[None],
+                            top_k[None], top_p[None], filtered=filtered)
+        return tok[0], pools
 
     def _copy_page_impl(self, pools, src, dst):
         """Copy-on-write: duplicate one physical page across every layer."""
@@ -139,8 +179,9 @@ class ContinuousEngine:
 
     def _advance_prefill(self, now) -> None:
         """Run ONE chunk of the oldest pending prefill; on the final chunk,
-        emit the sequence's next greedy token and publish its pages into the
-        prefix index."""
+        emit the sequence's next token (sampled at stream position
+        ``prefill_target`` under the request's SamplingParams) and publish
+        its pages into the prefix index."""
         sched = self.scheduler
         while self._prefilling:
             seq = self._prefilling[0]
@@ -153,10 +194,17 @@ class ContinuousEngine:
             chunk = np.zeros((1, self.prefill_chunk), np.int32)
             chunk[0, :end - start] = ctx[start:end]
             page_row = jnp.asarray(sched.cache.page_table[seq.slot])
+            sp = seq.request.sampling
+            final = end == seq.prefill_target
             tok, self.pools = self._prefill(
                 self.params, self.pools, jnp.asarray(chunk), page_row,
                 jnp.int32(start), jnp.int32(end),
-                final=end == seq.prefill_target)
+                jnp.uint32(sp.seed), jnp.float32(sp.temperature),
+                jnp.int32(sp.top_k), jnp.float32(sp.top_p),
+                # `sampled`/`filtered` only matter on the final chunk; pin
+                # them False otherwise so non-final chunks share one variant
+                final=final, sampled=final and not sp.greedy,
+                filtered=final and not sp.greedy and sp.filtered)
             seq.prefilled = end
             self.prefill_tokens += end - start
             if end == seq.prefill_target:
@@ -226,10 +274,11 @@ class ContinuousEngine:
                 }
 
             # one prompt chunk per iteration: decode steps interleave between
-            # a long prompt's chunks instead of stalling behind it. The chunk
-            # argmax on the final chunk is always a *new* token: the first
+            # a long prompt's chunks instead of stalling behind it. The token
+            # emitted on the final chunk is always a *new* token: the first
             # generation for a fresh request, the continuation for a resumed
-            # preemption (whose regenerated context is re-prefilled).
+            # preemption (whose prompt + generated context is re-prefilled
+            # forced — replay never re-decides an already-emitted token).
             self._advance_prefill(now)
             for slot in list(sched.running):
                 seq = sched.running[slot]
@@ -271,9 +320,38 @@ class ContinuousEngine:
             tokens = np.zeros((self.num_slots,), np.int32)
             for slot in slots:
                 tokens[slot] = sched.running[slot].generated[-1]
+            active = [sched.running[s].request.sampling for s in slots]
+            sampled = any(not sp.greedy for sp in active)
+            # skip the sampler's [S, V] filter sorts when no co-batched
+            # request constrains the distribution (disabled filters are
+            # exact no-ops, so variant choice never changes a draw)
+            filtered = any(not sp.greedy and sp.filtered for sp in active)
+            if sampled:
+                seeds = np.zeros((self.num_slots,), np.uint32)
+                positions = np.zeros((self.num_slots,), np.int32)
+                temps = np.zeros((self.num_slots,), np.float32)
+                top_ks = np.zeros((self.num_slots,), np.int32)
+                top_ps = np.ones((self.num_slots,), np.float32)
+                for slot in slots:
+                    seq = sched.running[slot]
+                    sp = seq.request.sampling
+                    seeds[slot] = sp.seed
+                    # stream position of the token this step emits — slot-
+                    # and batch-independent, so co-scheduling never changes
+                    # a draw
+                    positions[slot] = len(seq.request.prompt) \
+                        + len(seq.generated)
+                    temps[slot] = sp.temperature
+                    top_ks[slot] = sp.top_k
+                    top_ps[slot] = sp.top_p
+                sampling_args = tuple(jnp.asarray(a) for a in (
+                    seeds, positions, temps, top_ks, top_ps))
+            else:
+                sampling_args = self._null_sampling
             next_tokens, self.pools = self._decode(
                 self.params, self.pools, jnp.asarray(page_table),
-                jnp.asarray(seq_lens), jnp.asarray(tokens))
+                jnp.asarray(seq_lens), jnp.asarray(tokens),
+                *sampling_args, sampled=sampled, filtered=filtered)
             self.steps += 1
             next_np = np.asarray(next_tokens)
             t_tok = now()

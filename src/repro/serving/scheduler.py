@@ -23,11 +23,14 @@ prefix      requests are matched against a hash-chained index of cached KV
             (leaf-first) under pool pressure, before any preemption.
 growth      crossing a page boundary mid-decode allocates one page. If the
             pool is exhausted (after evicting cached prefixes), the most
-            recently admitted sequence is preempted (recompute-style: its
+            recently admitted sequence is preempted (forced replay: its
             pages are freed and it rejoins the front of the queue carrying
-            the tokens generated so far — greedy decode regenerates the
-            identical continuation, and its re-prefill typically prefix-hits
-            its own surviving cached pages).
+            the tokens generated so far — on re-admission that context is
+            re-prefilled *forced*, no token is re-decided, and the next
+            token's (seed, position) PRNG key is the one the uninterrupted
+            run would have used, so the continuation is token-identical
+            under any sampling setting; the re-prefill typically prefix-hits
+            the sequence's own surviving cached pages).
 recycling   EOS / max-new-tokens frees the slot and its pages in O(1); the
             next queued request takes the slot without touching the compiled
             decode step (fixed batch, inactive slots masked by seq_len 0).
@@ -39,6 +42,7 @@ from collections import deque
 from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 from .kv_cache import PageAllocator, PagedCacheState, pages_needed
+from .sampling import SamplingParams
 
 
 @dataclasses.dataclass
@@ -48,6 +52,8 @@ class Request:
     max_new_tokens: int
     eos_id: Optional[int] = None
     arrival: float = 0.0                # seconds into the trace
+    sampling: SamplingParams = dataclasses.field(
+        default_factory=SamplingParams)     # greedy unless asked otherwise
 
 
 @dataclasses.dataclass
@@ -123,6 +129,12 @@ class PrefixIndex:
         self._full: Dict[_EdgeKey, _CachedPage] = {}
         # parent page id -> {tail tokens -> entry}
         self._partials: Dict[int, Dict[Tuple[int, ...], _CachedPage]] = {}
+        # page id -> number of index entries holding it, maintained
+        # incrementally at entry creation/removal (the same physical page can
+        # carry both a partial entry and a later full entry). Rebuilding this
+        # map per evict_one()/reclaimable() call made eviction bursts O(pages
+        # freed * index entries).
+        self._holds: Dict[int, int] = {}
         self._clock = 0
         self.hits = 0
         self.misses = 0
@@ -130,6 +142,16 @@ class PrefixIndex:
     def _tick(self) -> int:
         self._clock += 1
         return self._clock
+
+    def _hold(self, page: int) -> None:
+        self._holds[page] = self._holds.get(page, 0) + 1
+
+    def _unhold(self, page: int) -> None:
+        n = self._holds[page] - 1
+        if n:
+            self._holds[page] = n
+        else:
+            del self._holds[page]
 
     @property
     def num_entries(self) -> int:
@@ -139,13 +161,7 @@ class PrefixIndex:
         """Pages that evicting index entries would actually free right now:
         those whose every allocator hold belongs to the index (no running
         sequence shares them)."""
-        holds: Dict[int, int] = {}
-        for e in self._full.values():
-            holds[e.page] = holds.get(e.page, 0) + 1
-        for bucket in self._partials.values():
-            for e in bucket.values():
-                holds[e.page] = holds.get(e.page, 0) + 1
-        return sum(1 for p, n in holds.items()
+        return sum(1 for p, n in self._holds.items()
                    if self.allocator.ref_count(p) == n)
 
     # ------------------------------------------------------------------ match ---
@@ -201,6 +217,7 @@ class PrefixIndex:
             e = self._full.get(key)
             if e is None:
                 self.allocator.incref(pages[i])
+                self._hold(pages[i])
                 e = _CachedPage(key=key, parent_key=parent_key,
                                 page=pages[i], last_used=self._tick())
                 self._full[key] = e
@@ -220,6 +237,7 @@ class PrefixIndex:
             lru = min(bucket, key=lambda t: bucket[t].last_used)
             self._drop_partial(parent, lru)
         self.allocator.incref(pages[n_full])
+        self._hold(pages[n_full])
         bucket[rem] = _CachedPage(key=(parent, rem), parent_key=parent_key,
                                   page=pages[n_full], last_used=self._tick())
         if parent_key is not None:
@@ -232,6 +250,7 @@ class PrefixIndex:
             del self._partials[parent]
         if e.parent_key is not None:
             self._full[e.parent_key].children -= 1
+        self._unhold(e.page)
         self.allocator.free([e.page])
 
     def evict_one(self) -> bool:
@@ -243,27 +262,20 @@ class PrefixIndex:
         requests would hit. Non-reclaimable leaves go only when no
         reclaimable leaf exists (to unblock reclaimable interiors behind
         them). Returns False when the index is empty."""
-        holds: Dict[int, int] = {}
-        for e in self._full.values():
-            holds[e.page] = holds.get(e.page, 0) + 1
-        for bucket in self._partials.values():
-            for e in bucket.values():
-                holds[e.page] = holds.get(e.page, 0) + 1
-
         best: Optional[_CachedPage] = None
         fallback: Optional[_CachedPage] = None
         best_partial = fallback_partial = None
         for e in self._full.values():
             if e.children != 0:
                 continue
-            if self.allocator.ref_count(e.page) == holds[e.page]:
+            if self.allocator.ref_count(e.page) == self._holds[e.page]:
                 if best is None or e.last_used < best.last_used:
                     best, best_partial = e, None
             elif fallback is None or e.last_used < fallback.last_used:
                 fallback, fallback_partial = e, None
         for parent, bucket in self._partials.items():
             for tail, e in bucket.items():
-                if self.allocator.ref_count(e.page) == holds[e.page]:
+                if self.allocator.ref_count(e.page) == self._holds[e.page]:
                     if best is None or e.last_used < best.last_used:
                         best, best_partial = e, (parent, tail)
                 elif fallback is None or e.last_used < fallback.last_used:
@@ -278,6 +290,7 @@ class PrefixIndex:
         del self._full[best.key]
         if best.parent_key is not None:
             self._full[best.parent_key].children -= 1
+        self._unhold(best.page)
         self.allocator.free([best.page])
         return True
 
@@ -457,9 +470,12 @@ class Scheduler:
 
     def _preempt(self, seq: SequenceState) -> None:
         """Free the sequence's memory and put it back at the front of the
-        queue; its generated-so-far tokens are kept and re-prefilled on
-        re-admission (recompute preemption — cheap when its prompt pages
-        survive in the prefix index)."""
+        queue; its generated-so-far tokens are kept and re-prefilled as
+        *forced* context on re-admission (forced-replay preemption: nothing
+        is re-decided, and the next token's (seed, position) sampling key is
+        unchanged, so the resumed stream is token-identical even at
+        temperature > 0 — and cheap when its prompt pages survive in the
+        prefix index)."""
         self.allocator.free(self.cache.release(seq.slot))
         del self.running[seq.slot]
         self._free_slots.append(seq.slot)

@@ -95,6 +95,64 @@ def test_eviction_prefers_reclaimable_pages():
     assert full == shared                      # ...not the shared chain
 
 
+def test_index_incremental_holds_track_entries_exactly():
+    """Regression for the eviction-burst rescan: the index now maintains its
+    page->hold-count map incrementally. After any interleaving of inserts
+    (including re-registering the same page as a longer prefix, which gives
+    one page both a partial and a full entry) and evictions, the maintained
+    map must equal a from-scratch rebuild, and reclaimable() must agree with
+    the old rebuild-based definition."""
+    alloc, idx = _index(num_pages=64, page_size=4)
+    rng = np.random.default_rng(29)
+
+    def rebuilt():
+        holds = {}
+        for e in idx._full.values():
+            holds[e.page] = holds.get(e.page, 0) + 1
+        for bucket in idx._partials.values():
+            for e in bucket.values():
+                holds[e.page] = holds.get(e.page, 0) + 1
+        return holds
+
+    def check():
+        holds = rebuilt()
+        assert idx._holds == holds
+        assert idx.reclaimable() == sum(
+            1 for p, n in holds.items() if alloc.ref_count(p) == n)
+
+    writer_held = []
+    for step in range(40):
+        op = rng.integers(0, 3)
+        if op < 2:                              # insert a random prefix
+            n_tok = int(rng.integers(2, 15))
+            pages = alloc.alloc(-(-n_tok // 4))
+            if pages is None:
+                continue
+            base = int(rng.integers(0, 4)) * 100
+            toks = [base + t for t in range(n_tok)]
+            idx.insert(toks, pages)
+            if rng.integers(0, 2):              # half the writers finish
+                alloc.free(pages)
+            else:
+                writer_held.append(pages)
+            # sometimes re-register the same tokens grown by a few more:
+            # the old tail page ends up under a full entry too
+            if rng.integers(0, 2) and n_tok % 4:
+                extra = alloc.alloc(1)
+                if extra is not None:
+                    idx.insert(toks + [base + 50], pages + extra)
+                    alloc.free(extra)
+        else:
+            idx.evict_one()
+        check()
+    while idx.evict_one():
+        check()
+    assert idx._holds == {}
+    for pages in writer_held:
+        alloc.free(pages)
+    assert alloc.used_count == 0
+
+
 def test_index_keeps_existing_entry_on_duplicate_insert():
     alloc, idx = _index()
     p1 = alloc.alloc(1)

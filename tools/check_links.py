@@ -1,0 +1,80 @@
+#!/usr/bin/env python
+"""Markdown link check for README.md and docs/ (CI: docs must not rot).
+
+Checks, for every ``[text](target)`` in the given files/directories:
+
+- relative file targets resolve on disk (anchors stripped first);
+- in-page ``#anchor`` targets match a heading's GitHub-style slug;
+- external ``http(s)://``/``mailto:`` targets are syntax-checked only — no
+  network, so the job is deterministic and offline-safe.
+
+    python tools/check_links.py README.md docs
+
+Exits non-zero listing every broken link.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+LINK = re.compile(r"\[[^\]\[]*\]\(([^)\s]+)\)")
+HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+FENCE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def slugify(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, punctuation dropped, spaces to
+    dashes (inline code/emphasis markers stripped first)."""
+    text = re.sub(r"[`*_]", "", heading.strip()).lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def _slugs(markdown: str) -> set[str]:
+    """Anchor slugs of a document's real headings — fenced code is stripped
+    first so a '# comment' inside a code block can't satisfy an anchor."""
+    return {slugify(h) for h in HEADING.findall(FENCE.sub("", markdown))}
+
+
+def check_file(md: pathlib.Path) -> list[str]:
+    raw = md.read_text(encoding="utf-8")
+    text = FENCE.sub("", raw)                  # links inside code are literal
+    slugs = _slugs(raw)
+    errors = []
+    for target in LINK.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            if " " in target:
+                errors.append(f"{md}: malformed URL {target!r}")
+            continue
+        if target.startswith("#"):
+            if target[1:] not in slugs:
+                errors.append(f"{md}: missing anchor {target!r}")
+            continue
+        path_part, _, anchor = target.partition("#")
+        dest = (md.parent / path_part).resolve()
+        if not dest.exists():
+            errors.append(f"{md}: broken link {target!r} -> {dest}")
+        elif anchor and dest.suffix == ".md":
+            if anchor not in _slugs(dest.read_text(encoding="utf-8")):
+                errors.append(f"{md}: missing anchor {target!r} in {dest}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    files: list[pathlib.Path] = []
+    for arg in argv or ["README.md", "docs"]:
+        p = pathlib.Path(arg)
+        files.extend(sorted(p.rglob("*.md")) if p.is_dir() else [p])
+    errors = []
+    for md in files:
+        errors.extend(check_file(md))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(files)} file(s): "
+          f"{'FAIL' if errors else 'ok'} ({len(errors)} broken)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
