@@ -20,17 +20,30 @@ and with per-request temperature/top-k/top-p (chat-shaped traffic), so the
 on-device sampler's overhead — two [slots, vocab] sorts plus the categorical
 draw per step — shows up as a tok/s delta instead of a guess.
 
+With ``--tp N`` (N > 1; needs N devices — on CPU set
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``) a fourth section
+serves the same trace through the tensor-parallel engine: tok/s vs tp=1, the
+number of diverged token streams (0 expected), per-device pages-in-use /
+KV bytes under head sharding, and the analytic all-reduce wire bytes.
+
     PYTHONPATH=src python -m benchmarks.serving [--arch llama3.2-3b] \
-        [--json serving_bench.json]
+        [--json serving_bench.json] [--tp 2]
 
 Emits ``name,us_per_call,derived`` CSV rows like the other benchmarks, plus a
 human-readable summary with p50/p99 inter-token latency; ``--json`` writes
-the full result dict (CI uploads it as an artifact).
+the full result dict (CI uploads it as an artifact, and
+``tools/check_bench.py`` gates it against ``benchmarks/baselines/``).
+An engine error — any request finishing with an ``"error"`` result the trace
+did not ask for, or an engine exception — exits nonzero WITHOUT writing the
+JSON artifact, so CI never uploads (or gates on) a partial result as if it
+were healthy.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
+import sys
 import time
 
 import jax
@@ -45,6 +58,17 @@ from repro.serving import (ContinuousEngine, Request, SamplingParams,
 from .common import emit
 
 PAGE_SIZE = 16
+
+
+class EngineError(RuntimeError):
+    """A serving run produced error results the trace did not ask for."""
+
+
+def chat_sampling(uid: int) -> SamplingParams:
+    """The canonical chat-shaped sampling settings every stochastic section
+    uses (seed = uid so streams are reproducible AND distinct per request);
+    one definition, so the sampled and tp sections price the same traffic."""
+    return SamplingParams(temperature=0.8, top_k=40, top_p=0.95, seed=uid)
 
 
 def make_trace(n_requests, rate, *, prompt_len=32, gen_range=(8, 64), seed=0):
@@ -116,20 +140,26 @@ def run_static(model, params, requests, batch_size):
     return token_times, wall
 
 
-def run_continuous(model, params, requests, slots, *, prefix_cache=False):
+def run_continuous(model, params, requests, slots, *, prefix_cache=False,
+                   tp=1):
     """Serve ``requests`` through one ContinuousEngine sized for the trace.
     Returns (uid -> token_times, full results dict, wall seconds, engine) —
-    every section (rates / shared-prefix / sampled) goes through here so the
-    pool-sizing math lives in exactly one place."""
+    every section (rates / shared-prefix / sampled / tp) goes through here
+    so the pool-sizing math lives in exactly one place. Error results are an
+    engine failure (these traces all fit the pool): raise instead of letting
+    the bench summarize a partial run as healthy."""
     max_seq = max(len(r.prompt) + r.max_new_tokens for r in requests)
     num_pages = slots * pages_needed(max_seq + 1, PAGE_SIZE) + 2
     engine = ContinuousEngine(model, params, num_slots=slots,
                               num_pages=num_pages, page_size=PAGE_SIZE,
                               max_seq_len=max_seq + PAGE_SIZE,
-                              prefix_cache=prefix_cache)
+                              prefix_cache=prefix_cache, tp=tp)
     t0 = time.perf_counter()
     results = engine.run(requests)
     wall = time.perf_counter() - t0
+    errors = {uid: r["error"] for uid, r in results.items() if "error" in r}
+    if errors:
+        raise EngineError(f"engine returned error results: {errors}")
     times = {uid: r["token_times"] for uid, r in results.items()}
     return times, results, wall, engine
 
@@ -213,8 +243,7 @@ def run_sampled(model, params, n_requests, slots, results):
     base = make_trace(n_requests, float("inf"))
     sampled = [Request(uid=r.uid, prompt=r.prompt,
                        max_new_tokens=r.max_new_tokens, arrival=r.arrival,
-                       sampling=SamplingParams(temperature=0.8, top_k=40,
-                                               top_p=0.95, seed=r.uid))
+                       sampling=chat_sampling(r.uid))
                for r in base]
     out = {}
     tokens = {}
@@ -238,8 +267,59 @@ def run_sampled(model, params, n_requests, slots, results):
     results["sampled"] = out
 
 
+def run_tp(model, params, n_requests, slots, tp, results):
+    """Tensor-parallel section: the same mixed greedy/sampled trace served
+    at tp=1 and tp=N. Streams must not diverge (head-sharded TP is an
+    execution layout, not a model change); per-device pages/KV bytes and the
+    analytic all-reduce wire bytes quantify what sharding buys and costs.
+
+    Runs in fp32, like the cross-engine parity tests: at bf16 the psum's
+    reassociated summation flips near-tied argmaxes of this random-init
+    smoke model, which would conflate layout rounding noise with real
+    divergence — ``diverged_streams`` is the health signal here, and 0 is
+    the only healthy value.
+    """
+    if len(jax.devices()) < tp:
+        raise EngineError(
+            f"--tp {tp} needs {tp} devices, found {len(jax.devices())} "
+            "(set XLA_FLAGS=--xla_force_host_platform_device_count)")
+    params = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    model = build_model(dataclasses.replace(model.arch, dtype="float32"))
+    base = make_trace(n_requests, float("inf"))
+    trace = [Request(uid=r.uid, prompt=r.prompt,
+                     max_new_tokens=r.max_new_tokens, arrival=r.arrival,
+                     sampling=chat_sampling(r.uid)
+                     if r.uid % 2 else SamplingParams())
+             for r in base]
+    out = {"tp": tp}
+    tokens = {}
+    for degree in (1, tp):
+        times, res, wall, engine = run_continuous(model, params, trace,
+                                                  slots, prefix_cache=True,
+                                                  tp=degree)
+        tokens[degree] = {uid: r["tokens"] for uid, r in res.items()}
+        tag = f"tp{degree}"
+        out[tag] = summarize(times, wall)
+        if degree > 1:
+            out[tag].update(engine.tp_stats())
+        emit(f"serve_{tag}_decode", wall * 1e6 / max(1, n_requests),
+             f"{out[tag]['tok_s']:.1f}tok/s_p50={out[tag]['p50_ms']:.1f}ms")
+    out["diverged_streams"] = sum(
+        1 for uid in tokens[1] if tokens[1][uid] != tokens[tp][uid])
+    tps = out[f"tp{tp}"]
+    print(f"[serving] tp={tp} trace ({n_requests} requests): "
+          f"tp1 {out['tp1']['tok_s']:.1f} tok/s vs tp{tp} "
+          f"{tps['tok_s']:.1f} tok/s, "
+          f"{out['diverged_streams']}/{n_requests} streams diverged, "
+          f"{tps['collective_bytes_per_device'] / 1e6:.2f} MB all-reduced "
+          f"and {tps['per_device']['kv_bytes'] / 1e6:.2f} MB KV "
+          f"({tps['per_device']['pages_in_use']} pages) per device")
+    results["tensor_parallel"] = out
+
+
 def run(arch_name="llama3.2-3b", n_requests=16, slots=4,
-        rates=(4.0, 16.0, float("inf")), json_path=None) -> dict:
+        rates=(4.0, 16.0, float("inf")), json_path=None, tp=1,
+        tp_only=False) -> dict:
     arch = smoke_config(arch_name)
     model = build_model(arch)
     params = model.init(jax.random.key(0))
@@ -247,9 +327,12 @@ def run(arch_name="llama3.2-3b", n_requests=16, slots=4,
 
     results = {"arch": arch_name, "n_requests": n_requests, "slots": slots,
                "backend": jax.default_backend(), "rates": {}}
-    run_rates(model, params, n_requests, slots, rates, results)
-    run_shared_prefix(model, params, n_requests, slots, results)
-    run_sampled(model, params, n_requests, slots, results)
+    if not tp_only:
+        run_rates(model, params, n_requests, slots, rates, results)
+        run_shared_prefix(model, params, n_requests, slots, results)
+        run_sampled(model, params, n_requests, slots, results)
+    if tp > 1:
+        run_tp(model, params, n_requests, slots, tp, results)
     if json_path:
         with open(json_path, "w") as f:
             json.dump(results, f, indent=2)
@@ -262,11 +345,29 @@ def main() -> None:
     ap.add_argument("--arch", default="llama3.2-3b")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--tp", type=int, default=1,
+                    help="add a tensor-parallel section at this degree "
+                         "(needs that many devices)")
+    ap.add_argument("--tp-only", action="store_true",
+                    help="run ONLY the tensor-parallel section (it serves "
+                         "tp=1 itself for the comparison) — the multidevice "
+                         "CI job uses this to avoid re-running the "
+                         "single-device sections the tier1 job covers")
     ap.add_argument("--json", default="",
                     help="also write the full results dict to this path")
     args = ap.parse_args()
+    if args.tp_only and args.tp <= 1:
+        ap.error("--tp-only requires --tp > 1")
     print("name,us_per_call,derived")
-    run(args.arch, args.requests, args.slots, json_path=args.json or None)
+    try:
+        run(args.arch, args.requests, args.slots, json_path=args.json or None,
+            tp=args.tp, tp_only=args.tp_only)
+    except Exception as e:  # noqa: BLE001 — any engine failure must fail CI
+        # no JSON is written on this path: a partial artifact uploaded by CI
+        # reads as a healthy run with silently missing sections
+        print(f"[serving] ENGINE ERROR: {type(e).__name__}: {e}",
+              file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

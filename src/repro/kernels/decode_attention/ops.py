@@ -4,6 +4,13 @@ The Pallas kernel lowers on TPU backends (and everywhere under
 ``interpret=True``, which is how the parity tests run it); CPU serving and the
 dry-run fall back to the pure-JAX gather in ``ref.py`` — identical numerics to
 the static engine's dense decode path.
+
+Head counts are whatever the caller's arrays carry, NOT an arch contract:
+under the serving engine's tensor parallelism these wrappers run inside
+shard_map, where ``Hq``/``Hkv`` are the *local* head counts (arch counts
+divided by tp) and the page pools are the shard's heads' slice of every
+physical page. The only invariant is GQA consistency, Hq % Hkv == 0 — which
+head sharding preserves because tp divides both counts.
 """
 from __future__ import annotations
 

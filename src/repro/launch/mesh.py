@@ -30,6 +30,17 @@ def make_mesh(shape, axes):
     return _make(shape, axes)
 
 
+def make_tp_mesh(tp: int):
+    """1-D ("model",) mesh over ``tp`` devices — the serving engine's
+    tensor-parallel mesh (head-sharded paged KV + Megatron projections).
+    CPU CI gets its devices from XLA_FLAGS=--xla_force_host_platform_device_count."""
+    n = len(jax.devices())
+    assert n >= tp, (
+        f"tp={tp} needs {tp} devices, found {n} "
+        "(set XLA_FLAGS=--xla_force_host_platform_device_count=N on CPU)")
+    return make_mesh((tp,), ("model",))
+
+
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over host (CPU) devices for tests."""
     n = data * model

@@ -119,7 +119,8 @@ def _run_continuous(model, params, args, arch) -> dict:
                               num_pages=num_pages, page_size=args.page_size,
                               max_seq_len=max_seq + args.page_size,
                               prefix_cache=args.prefix_cache,
-                              prefill_chunk=args.prefill_chunk or None)
+                              prefill_chunk=args.prefill_chunk or None,
+                              tp=args.tp)
     reqs = [Request(uid=i, prompt=[int(t) for t in prompt[i]],
                     max_new_tokens=glen,
                     sampling=SamplingParams(temperature=args.temperature,
@@ -139,10 +140,19 @@ def _run_continuous(model, params, args, arch) -> dict:
           f"{engine.cached_prefill_tokens} from prefix cache)")
     print(f"[serve/continuous] sample generations (first 8 ids/row): "
           f"{out[:2, :8].tolist()}")
-    return {"tokens": out, "wall": wall, "steps": engine.steps,
-            "prefills": engine.prefills,
-            "prefill_tokens": engine.prefill_tokens,
-            "cached_prefill_tokens": engine.cached_prefill_tokens}
+    stats = {"tokens": out, "wall": wall, "steps": engine.steps,
+             "prefills": engine.prefills,
+             "prefill_tokens": engine.prefill_tokens,
+             "cached_prefill_tokens": engine.cached_prefill_tokens}
+    if args.tp > 1:
+        tps = engine.tp_stats()
+        print(f"[serve/continuous] tp={args.tp}: "
+              f"{tps['collective_bytes_per_device'] / 1e6:.2f} MB "
+              f"all-reduced per device, "
+              f"{tps['per_device']['kv_bytes'] / 1e6:.2f} MB KV per device "
+              f"({tps['per_device']['pages_in_use']} pages, head-sharded)")
+        stats["tp_stats"] = tps
+    return stats
 
 
 def main(argv=None) -> dict:
@@ -166,6 +176,11 @@ def main(argv=None) -> dict:
                     help="base PRNG seed: params init + per-request "
                          "sampling seeds (--seed + request index)")
     # continuous-engine knobs
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree over a 1-D device mesh "
+                         "(continuous engine only; must divide the arch's "
+                         "query AND kv head counts; on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     ap.add_argument("--slots", type=int, default=0,
                     help="decode slots (default: --batch)")
     ap.add_argument("--page-size", type=int, default=16)
@@ -189,6 +204,8 @@ def main(argv=None) -> dict:
     if sp.greedy and sp.filtered:
         ap.error("--top-k/--top-p have no effect at --temperature 0 "
                  "(greedy argmax); set --temperature > 0 to sample")
+    if args.tp > 1 and args.engine != "continuous":
+        ap.error("--tp requires --engine continuous")
 
     arch = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     assert not arch.bidirectional, "encoder-only archs have no decode step"

@@ -52,7 +52,12 @@ def init_attention(key, arch: ArchConfig, fuse_qkv: bool = True,
 
 def qkv_project(arch: ArchConfig, p: PyTree, x: jax.Array
                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """-> q [B,S,Hq,Dh], k/v [B,S,Hkv,Dh]."""
+    """-> q [B,S,Hq,Dh], k/v [B,S,Hkv,Dh].
+
+    Head counts are inferred from the projection widths, not the arch: under
+    the serving engine's tensor parallelism this runs inside shard_map on
+    weight shards holding Hq/tp (resp. Hkv/tp) contiguous heads, and the
+    reshape must follow the local width."""
     b, s, _ = x.shape
     hd = arch.resolved_head_dim
     if "wqkv" in p:
@@ -62,9 +67,9 @@ def qkv_project(arch: ArchConfig, p: PyTree, x: jax.Array
         q = dense(x, p["wq"], p.get("bq"))
         k = dense(x, p["wk"], p.get("bk"))
         v = dense(x, p["wv"], p.get("bv"))
-    q = q.reshape(b, s, arch.num_heads, hd)
-    k = k.reshape(b, s, arch.num_kv_heads, hd)
-    v = v.reshape(b, s, arch.num_kv_heads, hd)
+    q = q.reshape(b, s, q.shape[-1] // hd, hd)
+    k = k.reshape(b, s, k.shape[-1] // hd, hd)
+    v = v.reshape(b, s, v.shape[-1] // hd, hd)
     return q, k, v
 
 
@@ -393,10 +398,29 @@ def init_paged_kv_cache(arch: ArchConfig, num_pages: int, page_size: int,
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
+def _row_parallel_out(p: PyTree, o: jax.Array, x_dtype,
+                      tp_axis: Optional[str]) -> jax.Array:
+    """Output projection of a paged attention layer.
+
+    Single-device: the plain dense. Under serving TP (inside shard_map) the
+    shard's ``wo`` rows cover only its local heads, so the GEMM yields a
+    partial sum — psum it over the axis in fp32 and add the (replicated)
+    bias once, after the reduce.
+    """
+    if tp_axis is None:
+        return dense(o, p["wo"], p.get("bo"))
+    y = o.astype(jnp.float32) @ p["wo"].astype(jnp.float32)
+    y = jax.lax.psum(y, tp_axis)
+    if "bo" in p:
+        y = y + p["bo"].astype(jnp.float32)
+    return y.astype(x_dtype)
+
+
 def paged_prefill_attention_layer(arch: ArchConfig, p: PyTree, x: jax.Array,
                                   cache: PyTree, page_row: jax.Array,
                                   start: jax.Array, total_len: jax.Array,
-                                  mrope_positions=None
+                                  mrope_positions=None,
+                                  tp_axis: Optional[str] = None
                                   ) -> Tuple[jax.Array, PyTree]:
     """One prompt chunk of a single sequence, written directly into its pages.
 
@@ -406,6 +430,10 @@ def paged_prefill_attention_layer(arch: ArchConfig, p: PyTree, x: jax.Array,
     chunk (the rest of the chunk is padding). K/V rows land straight in the
     page pool — no dense bucket cache, no scatter pass — and padding rows
     (or rows past the allocated pages) are routed to the null page 0.
+
+    With ``tp_axis`` set this body runs per shard: local q/k/v heads, the
+    shard's slice of the page pool, and a row-parallel output projection
+    psum'd over the axis — the layer's only collective.
     """
     b, c, _ = x.shape
     assert b == 1, "chunked prefill runs one sequence at a time"
@@ -424,14 +452,15 @@ def paged_prefill_attention_layer(arch: ArchConfig, p: PyTree, x: jax.Array,
     from ..kernels.decode_attention import ops as pd_ops
     o = pd_ops.paged_prefill_attention(q[0], new_k, new_v, page_row, start,
                                        total_len)
-    y = dense(o.reshape(1, c, arch.q_dim), p["wo"], p.get("bo"))
+    y = _row_parallel_out(p, o.reshape(1, c, -1), x.dtype, tp_axis)
     return y, {"k": new_k, "v": new_v}
 
 
 def paged_decode_attention_layer(arch: ArchConfig, p: PyTree, x: jax.Array,
                                  cache: PyTree, page_table: jax.Array,
                                  seq_lens: jax.Array,
-                                 mrope_positions=None
+                                 mrope_positions=None,
+                                 tp_axis: Optional[str] = None
                                  ) -> Tuple[jax.Array, PyTree]:
     """One-token decode against a paged KV cache.
 
@@ -439,6 +468,12 @@ def paged_decode_attention_layer(arch: ArchConfig, p: PyTree, x: jax.Array,
     seq_lens [B] = tokens already in the cache (the new token's position).
     Inactive slots carry seq_len 0: their K/V lands in the null page and
     their attention output is garbage the engine never reads.
+
+    With ``tp_axis`` set this body runs per shard_map shard (Megatron head
+    parallelism): the weight shards project only the local Hq/tp query and
+    Hkv/tp KV heads, the cache shard is the local heads' slice of every
+    page, and the row-parallel output projection is psum'd over the axis —
+    attention's single collective per layer.
     """
     b, s, _ = x.shape
     assert s == 1, "paged path is single-query decode only"
@@ -452,5 +487,5 @@ def paged_decode_attention_layer(arch: ArchConfig, p: PyTree, x: jax.Array,
     from ..kernels.decode_attention import ops as pd_ops
     o = pd_ops.paged_decode_attention(q[:, 0], new_k, new_v, page_table,
                                       seq_lens + 1)
-    y = dense(o.reshape(b, 1, arch.q_dim), p["wo"], p.get("bo"))
+    y = _row_parallel_out(p, o.reshape(b, 1, -1), x.dtype, tp_axis)
     return y, {"k": new_k, "v": new_v}

@@ -203,16 +203,29 @@ def init_mlp(key, kind: str, d_model: int, d_ff: int, use_bias: bool,
     return p
 
 
-def apply_mlp(kind: str, p: PyTree, x: jax.Array) -> jax.Array:
+def apply_mlp(kind: str, p: PyTree, x: jax.Array,
+              tp_axis: Optional[str] = None) -> jax.Array:
     with jax.named_scope("mlp"):
-        return _apply_mlp(kind, p, x)
+        return _apply_mlp(kind, p, x, tp_axis)
 
 
-def _apply_mlp(kind: str, p: PyTree, x: jax.Array) -> jax.Array:
+def _apply_mlp(kind: str, p: PyTree, x: jax.Array,
+               tp_axis: Optional[str] = None) -> jax.Array:
+    """Feed-forward block. With ``tp_axis`` set (serving TP under shard_map)
+    the params are the Megatron shards — w1/w3 column-parallel, w2
+    row-parallel — so the local GEMM yields a *partial* output that is
+    psum'd over the axis in fp32, and w2's bias is added once, after the
+    reduce (a pre-psum add would count it tp times)."""
     if kind == "swiglu":
         h = silu(dense(x, p["w1"], p.get("b1"))) * dense(x, p["w3"], p.get("b3"))
     elif kind == "gelu":
         h = gelu(dense(x, p["w1"], p.get("b1")))
     else:
         raise ValueError(kind)
-    return dense(h, p["w2"], p.get("b2"))
+    if tp_axis is None:
+        return dense(h, p["w2"], p.get("b2"))
+    y = h.astype(jnp.float32) @ p["w2"].astype(jnp.float32)
+    y = jax.lax.psum(y, tp_axis)
+    if "b2" in p:
+        y = y + p["b2"].astype(jnp.float32)
+    return y.astype(x.dtype)

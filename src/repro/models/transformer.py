@@ -244,21 +244,27 @@ def _decode_block_mix(arch: ArchConfig, blk: PyTree, x: jax.Array, mix_fn
     return x, new_c
 
 
-def _decode_block_ffn(arch: ArchConfig, blk: PyTree, x: jax.Array) -> jax.Array:
-    """Shared MoE/MLP tail of a decode block (no-op for mamba2 blocks)."""
+def _decode_block_ffn(arch: ArchConfig, blk: PyTree, x: jax.Array,
+                      tp_axis: Optional[str] = None) -> jax.Array:
+    """Shared MoE/MLP tail of a decode block (no-op for mamba2 blocks).
+    ``tp_axis``: serving tensor parallelism — the MLP runs on Megatron
+    shards and psums its row-parallel output (MoE has no TP path; the
+    engine rejects MoE archs at tp > 1)."""
     if arch.family == "ssm":
         return x
     h = x if arch.post_norm else apply_norm(arch.norm, blk["ln2"], x)
     if "moe" in blk:
+        assert tp_axis is None, "no TP path for MoE blocks"
         y, _ = moe_lib.apply_moe(arch, blk["moe"], h)
     else:
-        y = apply_mlp(arch.mlp, blk["mlp"], h)
+        y = apply_mlp(arch.mlp, blk["mlp"], h, tp_axis)
     return apply_norm(arch.norm, blk["ln2"], x + y) if arch.post_norm else x + y
 
 
 def paged_decode_period(arch: ArchConfig, p: PyTree, cache: PyTree,
                         x: jax.Array, page_table: jax.Array,
-                        seq_lens: jax.Array, mrope_positions=None
+                        seq_lens: jax.Array, mrope_positions=None,
+                        tp_axis: Optional[str] = None
                         ) -> Tuple[jax.Array, PyTree]:
     new_cache: PyTree = {}
     for i in range(period_length(arch)):
@@ -268,22 +274,23 @@ def paged_decode_period(arch: ArchConfig, p: PyTree, cache: PyTree,
         def mix(h, blk=blk, i=i):
             return attn_lib.paged_decode_attention_layer(
                 arch, blk["attn"], h, cache[f"layer_{i}"], page_table,
-                seq_lens, mrope_positions)
+                seq_lens, mrope_positions, tp_axis)
         x, new_cache[f"layer_{i}"] = _decode_block_mix(arch, blk, x, mix)
-        x = _decode_block_ffn(arch, blk, x)
+        x = _decode_block_ffn(arch, blk, x, tp_axis)
     return x, new_cache
 
 
 def paged_decode_stack(arch: ArchConfig, stacked: PyTree, caches: PyTree,
                        x: jax.Array, page_table: jax.Array,
-                       seq_lens: jax.Array, mrope_positions=None
+                       seq_lens: jax.Array, mrope_positions=None,
+                       tp_axis: Optional[str] = None
                        ) -> Tuple[jax.Array, PyTree]:
     if isinstance(stacked, dict) and any(k.startswith("period_") for k in stacked):
         new_caches: PyTree = {}
         for z in range(len(stacked)):
             x, nc = paged_decode_period(arch, stacked[f"period_{z}"],
                                         caches[f"period_{z}"], x, page_table,
-                                        seq_lens, mrope_positions)
+                                        seq_lens, mrope_positions, tp_axis)
             new_caches[f"period_{z}"] = nc
         return x, new_caches
 
@@ -291,7 +298,7 @@ def paged_decode_stack(arch: ArchConfig, stacked: PyTree, caches: PyTree,
         period_params, cache = inputs
         h, new_cache = paged_decode_period(arch, period_params, cache, h,
                                            page_table, seq_lens,
-                                           mrope_positions)
+                                           mrope_positions, tp_axis)
         return h, new_cache
     x, new_caches = jax.lax.scan(scan_body, x, (stacked, caches))
     return x, new_caches
@@ -299,7 +306,8 @@ def paged_decode_stack(arch: ArchConfig, stacked: PyTree, caches: PyTree,
 
 def paged_prefill_period(arch: ArchConfig, p: PyTree, cache: PyTree,
                          x: jax.Array, page_row: jax.Array, start: jax.Array,
-                         total_len: jax.Array, mrope_positions=None
+                         total_len: jax.Array, mrope_positions=None,
+                         tp_axis: Optional[str] = None
                          ) -> Tuple[jax.Array, PyTree]:
     new_cache: PyTree = {}
     for i in range(period_length(arch)):
@@ -309,9 +317,9 @@ def paged_prefill_period(arch: ArchConfig, p: PyTree, cache: PyTree,
         def mix(h, blk=blk, i=i):
             return attn_lib.paged_prefill_attention_layer(
                 arch, blk["attn"], h, cache[f"layer_{i}"], page_row, start,
-                total_len, mrope_positions)
+                total_len, mrope_positions, tp_axis)
         x, new_cache[f"layer_{i}"] = _decode_block_mix(arch, blk, x, mix)
-        x = _decode_block_ffn(arch, blk, x)
+        x = _decode_block_ffn(arch, blk, x, tp_axis)
     return x, new_cache
 
 
@@ -327,7 +335,8 @@ def chunk_final_hidden(x: jax.Array, start: jax.Array,
 
 def paged_prefill_stack(arch: ArchConfig, stacked: PyTree, caches: PyTree,
                         x: jax.Array, page_row: jax.Array, start: jax.Array,
-                        total_len: jax.Array, mrope_positions=None
+                        total_len: jax.Array, mrope_positions=None,
+                        tp_axis: Optional[str] = None
                         ) -> Tuple[jax.Array, PyTree]:
     """Chunked prefill: one prompt chunk [1, C, D] of one sequence through
     the stack, K/V written straight into the sequence's pages. The caller
@@ -338,7 +347,8 @@ def paged_prefill_stack(arch: ArchConfig, stacked: PyTree, caches: PyTree,
         for z in range(len(stacked)):
             x, nc = paged_prefill_period(arch, stacked[f"period_{z}"],
                                          caches[f"period_{z}"], x, page_row,
-                                         start, total_len, mrope_positions)
+                                         start, total_len, mrope_positions,
+                                         tp_axis)
             new_caches[f"period_{z}"] = nc
         return x, new_caches
 
@@ -346,7 +356,7 @@ def paged_prefill_stack(arch: ArchConfig, stacked: PyTree, caches: PyTree,
         period_params, cache = inputs
         h, new_cache = paged_prefill_period(arch, period_params, cache, h,
                                             page_row, start, total_len,
-                                            mrope_positions)
+                                            mrope_positions, tp_axis)
         return h, new_cache
     x, new_caches = jax.lax.scan(scan_body, x, (stacked, caches))
     return x, new_caches

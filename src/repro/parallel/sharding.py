@@ -313,6 +313,84 @@ def constrain_flat(tree) -> object:
             leaf, NamedSharding(mesh, flat_grad_pspec(kp, leaf))), tree)
 
 
+# -------------------------------------------------------- serving TP specs ----
+
+# Megatron tensor-parallel layout for the *serving* engine's shard_map path
+# (replicated activations, head-sharded attention, column/row-parallel MLP).
+# Unlike the training rules above these name the mesh axis directly — the
+# serving mesh is a fixed 1-D ("model",) mesh, there is no logical-rule
+# indirection to thread through shard_map's in_specs. Biases of row-parallel
+# projections (bo, b2) stay replicated: they are added once, AFTER the psum.
+_SERVING_TP_RULES: Dict[str, Tuple[Optional[str], ...]] = {
+    "wq": (None, "model"),      # column-parallel: each shard owns Hq/tp heads
+    "wk": (None, "model"),      # (contiguous head blocks — q/kv dims are
+    "wv": (None, "model"),      #  head-major, so block i == heads of shard i)
+    "bq": ("model",),
+    "bk": ("model",),
+    "bv": ("model",),
+    "wo": ("model", None),      # row-parallel: partial sums -> psum
+    "w1": (None, "model"),      # column-parallel d_ff
+    "w3": (None, "model"),
+    "b1": ("model",),
+    "b3": ("model",),
+    "w2": ("model", None),      # row-parallel: partial sums -> psum
+}
+
+
+def serving_param_pspecs(params) -> object:
+    """PartitionSpec pytree for the TP serving engine (shard_map in_specs).
+
+    Attention/MLP projections follow ``_SERVING_TP_RULES``; every other leaf
+    — embedding, lm head, norms, row-parallel biases — is replicated, so the
+    logits (and therefore the sampler's draws) are computed identically on
+    every shard and the emitted token vector needs no collective at all.
+    Fused ``wqkv``/``bqkv`` leaves are rejected: a contiguous slice of the
+    fused feature dim would mix q and kv columns — the engine splits them
+    into wq/wk/wv before sharding (``serving.engine._split_fused_qkv``).
+    """
+    def leaf_spec(key_path, leaf):
+        name = _path_names(key_path)[-1]
+        if name in ("wqkv", "bqkv"):
+            raise ValueError(
+                "fused qkv cannot be head-sharded; split into wq/wk/wv first "
+                f"({'/'.join(_path_names(key_path))})")
+        logical = _SERVING_TP_RULES.get(name)
+        if logical is None:
+            return P(*([None] * leaf.ndim))
+        pad = leaf.ndim - len(logical)
+        assert pad >= 0, (key_path, leaf.shape, logical)
+        return P(*([None] * pad + list(logical)))
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def paged_pool_pspecs(pools) -> object:
+    """Head-shard the paged KV pools for TP serving: every pool leaf is
+    [P, page, Hkv, Dh] (scanned stacks carry a leading period axis), and the
+    KV-head axis — always ndim-2 — goes to "model". Page ids stay global:
+    each shard holds the same pages, 1/tp of every page's heads, so one host
+    allocator/page table drives all shards."""
+    def leaf_spec(leaf):
+        spec = [None] * leaf.ndim
+        spec[-2] = "model"
+        return P(*spec)
+    return jax.tree.map(leaf_spec, pools)
+
+
+def shard_map_tp(f, mesh: Mesh, in_specs, out_specs):
+    """``shard_map`` with replication checking off, across jax versions.
+
+    The TP serving steps return psum-replicated values (token ids) under a
+    ``P()``/``P(None)`` out_spec; the replication checker cannot always prove
+    that through the sampler's PRNG ops, and its keyword changed name
+    (check_rep -> check_vma) across the versions this repo supports."""
+    try:
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
+    except TypeError:
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)
+
+
 def _cache_leaf_spec(path: Tuple[str, ...], leaf) -> P:
     name = path[-1]
     if name in ("k", "v", "cross_k", "cross_v"):

@@ -13,7 +13,10 @@
 - ``engine``    : ``ContinuousEngine`` — fixed-shape jitted chunked-prefill /
                   decode steps driven by the scheduler, so requests join and
                   leave mid-flight without recompilation and long prompts
-                  never stall running decodes
+                  never stall running decodes; ``tp > 1`` runs those steps
+                  under shard_map on a 1-D mesh with head-sharded page pools
+                  and Megatron projections (two all-reduces per layer),
+                  token-identical to the single-device engine
 """
 from .engine import ContinuousEngine
 from .kv_cache import PageAllocator, PagedCacheState, pages_needed

@@ -19,6 +19,18 @@ matching tail page is copied on divergence — the engine's CoW device copy),
 and only the unmatched suffix is chunk-prefilled. Under shared system
 prompts this removes most prefill FLOPs *and* most prefill HBM writes.
 
+Tensor parallelism (``tp > 1``) runs the same engine over a 1-D ``("model",)``
+device mesh: the page pools are *head-sharded* (each device owns
+``num_kv_heads / tp`` heads of every physical page, so page ids — and
+therefore the host-side ``PageAllocator``/``PrefixIndex``/scheduler — stay
+global and unchanged), the attention/MLP projections are Megatron shards,
+and the decode/prefill/copy steps run under ``shard_map`` with exactly two
+all-reduces per layer (attention output, MLP output). Embedding, norms, and
+the LM head stay replicated, so every shard computes identical logits and
+identical sampler draws — the emitted token vector needs no collective, and
+greedy/seeded streams are token-identical across tp values and to the
+single-device engine (including preemption replay).
+
 Token selection is the shared on-device sampler (``serving.sampling``):
 each request carries ``SamplingParams`` (temperature / top-k / top-p /
 seed), and the key for the token at stream position p is
@@ -34,28 +46,64 @@ preemptions).
 """
 from __future__ import annotations
 
+import functools
 import time
 from collections import deque
-from typing import Deque, Dict, Optional, Sequence
+from typing import Any, Deque, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..models import transformer as tf
 from ..models.model import Model
+from ..parallel import sharding as shardlib
 from .kv_cache import pages_needed
 from .sampling import sample_tokens
 from .scheduler import Request, Scheduler, SequenceState
 
 SERVABLE_FAMILIES = ("dense", "moe", "vlm")
 
+TP_AXIS = "model"
+
+
+def _split_fused_qkv(params, arch):
+    """Replace every attention block's fused ``wqkv``/``bqkv`` with the
+    equivalent ``wq/wk/wv`` (``bq/bk/bv``) column slices.
+
+    Head-sharding needs head-major contiguous weight columns per projection;
+    a slice of the *fused* feature dim would mix q and kv columns. The split
+    is exact — each output column's GEMM is untouched — so tp > 1 engines
+    built from fused-init params emit bit-identical projections. Handles
+    both period-dict and scanned (leading period axis) layouts, since the
+    split runs on the trailing axis.
+    """
+    cuts = [arch.q_dim, arch.q_dim + arch.kv_dim]
+
+    def walk(tree):
+        if not isinstance(tree, dict):
+            return tree
+        out = {}
+        for key, val in tree.items():
+            if key == "attn" and isinstance(val, dict) and "wqkv" in val:
+                val = dict(val)
+                wq, wk, wv = jnp.split(val.pop("wqkv"), cuts, axis=-1)
+                val.update(wq=wq, wk=wk, wv=wv)
+                if "bqkv" in val:
+                    bq, bk, bv = jnp.split(val.pop("bqkv"), cuts, axis=-1)
+                    val.update(bq=bq, bk=bk, bv=bv)
+            out[key] = walk(val)
+        return out
+    return walk(params)
+
 
 class ContinuousEngine:
     def __init__(self, model: Model, params, *, num_slots: int = 8,
                  num_pages: int = 256, page_size: int = 16,
                  max_seq_len: int = 512, prefix_cache: bool = True,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None, tp: int = 1,
+                 mesh=None):
         arch = model.arch
         assert arch.family in SERVABLE_FAMILIES, \
             f"continuous engine serves attention-only LMs, not {arch.family}"
@@ -66,7 +114,6 @@ class ContinuousEngine:
             "paged decode-attention has no sliding-window masking yet"
         self.model = model
         self.arch = arch
-        self.params = params
         self.page_size = page_size
         self.num_slots = num_slots
         self.max_pages_per_seq = pages_needed(max_seq_len, page_size)
@@ -81,24 +128,53 @@ class ContinuousEngine:
                                    prefix_cache=prefix_cache)
         self.pools = tf.init_paged_caches(arch, num_pages, page_size,
                                           jnp.dtype(arch.dtype))
+
+        # ---- tensor parallelism over a 1-D ("model",) mesh -------------------
+        assert tp >= 1, tp
+        self.tp = tp
+        if tp > 1:
+            assert arch.moe is None, \
+                "TP serving covers dense attention LMs (no MoE shards yet)"
+            assert arch.num_heads % tp == 0 and arch.num_kv_heads % tp == 0, \
+                (f"tp={tp} must divide query heads ({arch.num_heads}) and "
+                 f"KV heads ({arch.num_kv_heads}) — head-sharded layout")
+            assert arch.d_ff % tp == 0, (arch.d_ff, tp)
+            if mesh is None:
+                from ..launch.mesh import make_tp_mesh
+                mesh = make_tp_mesh(tp)
+            assert mesh.shape[TP_AXIS] == tp, (dict(mesh.shape), tp)
+            self.mesh = mesh
+            self.tp_axis: Optional[str] = TP_AXIS
+            # fused qkv cannot be head-sharded; split (exact) then shard
+            params = _split_fused_qkv(params, arch)
+            self._param_specs = shardlib.serving_param_pspecs(params)
+            self._pool_specs = shardlib.paged_pool_pspecs(self.pools)
+            params = jax.device_put(params, jax.tree.map(
+                lambda s: NamedSharding(mesh, s), self._param_specs,
+                is_leaf=lambda s: isinstance(s, P)))
+            self.pools = jax.device_put(self.pools, jax.tree.map(
+                lambda s: NamedSharding(mesh, s), self._pool_specs,
+                is_leaf=lambda s: isinstance(s, P)))
+        else:
+            self.mesh = None
+            self.tp_axis = None
+            self._param_specs = self._pool_specs = None
+        self.params = params
+
         self.steps = 0                  # decode steps executed (for stats)
         self.prefills = 0               # prefill completions (== admissions)
         self.prefill_tokens = 0         # prompt tokens actually computed
         self.cached_prefill_tokens = 0  # prompt tokens served from the cache
         self.cow_copies = 0             # divergent tail pages duplicated
+        self.collective_bytes = 0       # analytic TP wire bytes per device
         self._prefilling: Deque[SequenceState] = deque()
         # donate the page pools through decode AND prefill: without it each
         # call copies every layer's [P, page, Hkv, D] pool to update a few rows
         self._donate_pools = jax.default_backend() in ("tpu", "gpu")
-        donate = (1,) if self._donate_pools else ()
-        self._decode = jax.jit(self._decode_impl, donate_argnums=donate,
-                               static_argnames=("sampled", "filtered"))
-        self._prefill = jax.jit(self._prefill_impl, donate_argnums=donate,
-                                static_argnames=("final", "sampled",
-                                                 "filtered"))
-        self._copy_page = jax.jit(     # pools are argument 0 here, not 1
-            self._copy_page_impl,
-            donate_argnums=(0,) if self._donate_pools else ())
+        # one compiled entry per static variant (the flags select which
+        # sampler work exists at all); built lazily so e.g. all-greedy
+        # traffic never compiles a sampled step
+        self._jit_cache: Dict[Tuple, Any] = {}
         # the compiled all-greedy decode variant never reads the sampling
         # arrays; ship these cached placeholders instead of rebuilding and
         # re-transferring five [S] arrays every step of the default path
@@ -109,6 +185,56 @@ class ContinuousEngine:
             jnp.zeros((num_slots,), jnp.int32),     # top_k
             jnp.ones((num_slots,), jnp.float32),    # top_p
         )
+
+    # ------------------------------------------------------------ jit builders --
+    def _build(self, impl, in_specs, out_specs, donate):
+        """jit (and, at tp > 1, shard_map) one static variant of a step."""
+        if self.mesh is not None:
+            impl = shardlib.shard_map_tp(impl, self.mesh, in_specs, out_specs)
+        return jax.jit(impl,
+                       donate_argnums=donate if self._donate_pools else ())
+
+    def _decode_fn(self, sampled: bool, filtered: bool):
+        key = ("decode", sampled, filtered)
+        if key not in self._jit_cache:
+            impl = functools.partial(self._decode_impl, sampled=sampled,
+                                     filtered=filtered)
+            in_specs = (self._param_specs, self._pool_specs, P(None, None),
+                        P(None), P(None), P(None), P(None), P(None), P(None),
+                        P(None))
+            self._jit_cache[key] = self._build(
+                impl, in_specs, (P(None), self._pool_specs), donate=(1,))
+        return self._jit_cache[key]
+
+    def _prefill_fn(self, final: bool, sampled: bool, filtered: bool):
+        key = ("prefill", final, sampled, filtered)
+        if key not in self._jit_cache:
+            impl = functools.partial(self._prefill_impl, final=final,
+                                     sampled=sampled, filtered=filtered)
+            in_specs = (self._param_specs, self._pool_specs, P(None, None),
+                        P(None), P(), P(), P(), P(), P(), P())
+            self._jit_cache[key] = self._build(
+                impl, in_specs, (P(), self._pool_specs), donate=(1,))
+        return self._jit_cache[key]
+
+    def _copy_page_fn(self):
+        key = ("copy",)
+        if key not in self._jit_cache:
+            # pools are argument 0 here, not 1
+            self._jit_cache[key] = self._build(
+                self._copy_page_impl, (self._pool_specs, P(), P()),
+                self._pool_specs, donate=(0,))
+        return self._jit_cache[key]
+
+    def _tp_collective_bytes(self, positions: int) -> int:
+        """Analytic per-device wire bytes for one step's collectives: two
+        fp32 [positions, d_model] ring all-reduces per layer, each moving
+        2 * (tp-1)/tp of its payload per device."""
+        if self.tp <= 1:
+            return 0
+        payload = positions * self.arch.d_model * 4
+        per_layer = 2 * payload * 2 * (self.tp - 1) // self.tp
+        return self.arch.num_layers * per_layer
 
     # ------------------------------------------------------------- jitted fns ---
     def _decode_impl(self, params, pools, page_table, seq_lens, tokens,
@@ -126,7 +252,8 @@ class ContinuousEngine:
         only once the matching traffic shows up."""
         x = self.model._embed(params, tokens[:, None])
         x, pools = tf.paged_decode_stack(self.arch, params["blocks"], pools,
-                                         x, page_table, seq_lens)
+                                         x, page_table, seq_lens,
+                                         tp_axis=self.tp_axis)
         logits = self.model._logits(params, x)[:, 0]
         if not sampled:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32), pools
@@ -146,7 +273,8 @@ class ContinuousEngine:
         forced-replay invariant."""
         x = self.model._embed(params, tokens)
         x, pools = tf.paged_prefill_stack(self.arch, params["blocks"], pools,
-                                          x, page_row, start, total)
+                                          x, page_row, start, total,
+                                          tp_axis=self.tp_axis)
         if not final:
             return jnp.zeros((), jnp.int32), pools
         xl = tf.chunk_final_hidden(x, start, total)
@@ -170,8 +298,8 @@ class ContinuousEngine:
         """Execute the admission's CoW copy (if any) and queue the suffix."""
         if seq.cow is not None:
             src, dst = seq.cow
-            self.pools = self._copy_page(self.pools, jnp.int32(src),
-                                         jnp.int32(dst))
+            self.pools = self._copy_page_fn()(self.pools, jnp.int32(src),
+                                              jnp.int32(dst))
             self.scheduler.cow_done(seq)
             self.cow_copies += 1
         self.cached_prefill_tokens += seq.cached_len
@@ -196,17 +324,19 @@ class ContinuousEngine:
             page_row = jnp.asarray(sched.cache.page_table[seq.slot])
             sp = seq.request.sampling
             final = end == seq.prefill_target
-            tok, self.pools = self._prefill(
+            # `sampled`/`filtered` only matter on the final chunk; pin
+            # them False otherwise so non-final chunks share one variant
+            prefill = self._prefill_fn(final, final and not sp.greedy,
+                                       final and not sp.greedy and sp.filtered)
+            tok, self.pools = prefill(
                 self.params, self.pools, jnp.asarray(chunk), page_row,
                 jnp.int32(start), jnp.int32(end),
                 jnp.uint32(sp.seed), jnp.float32(sp.temperature),
-                jnp.int32(sp.top_k), jnp.float32(sp.top_p),
-                # `sampled`/`filtered` only matter on the final chunk; pin
-                # them False otherwise so non-final chunks share one variant
-                final=final, sampled=final and not sp.greedy,
-                filtered=final and not sp.greedy and sp.filtered)
+                jnp.int32(sp.top_k), jnp.float32(sp.top_p))
             seq.prefilled = end
             self.prefill_tokens += end - start
+            self.collective_bytes += self._tp_collective_bytes(
+                self.prefill_chunk)
             if end == seq.prefill_target:
                 self._prefilling.popleft()
                 self.prefills += 1
@@ -348,11 +478,12 @@ class ContinuousEngine:
                     seeds, positions, temps, top_ks, top_ps))
             else:
                 sampling_args = self._null_sampling
-            next_tokens, self.pools = self._decode(
+            next_tokens, self.pools = self._decode_fn(sampled, filtered)(
                 self.params, self.pools, jnp.asarray(page_table),
                 jnp.asarray(seq_lens), jnp.asarray(tokens),
-                *sampling_args, sampled=sampled, filtered=filtered)
+                *sampling_args)
             self.steps += 1
+            self.collective_bytes += self._tp_collective_bytes(self.num_slots)
             next_np = np.asarray(next_tokens)
             t_tok = now()
             for slot in slots:
@@ -375,3 +506,25 @@ class ContinuousEngine:
         """Distinct physical pages held — with prefix sharing this undercuts
         the logical page count (the dedup the README's memory math prices)."""
         return self.scheduler.allocator.used_count
+
+    def tp_stats(self) -> Dict[str, object]:
+        """Tensor-parallel accounting for the benchmark JSON.
+
+        Page ids are global under head sharding, so every device holds (a
+        1/tp-heads slice of) every in-use page: per-device *pages* equal the
+        global count while per-device *bytes* divide by tp.
+        ``collective_bytes`` is the analytic per-device ring all-reduce wire
+        traffic of the two per-layer psums (attention out, MLP out).
+        """
+        arch = self.arch
+        page_bytes = (self.page_size * arch.num_kv_heads
+                      * arch.resolved_head_dim
+                      * 2 * arch.num_layers * jnp.dtype(arch.dtype).itemsize)
+        return {
+            "tp": self.tp,
+            "collective_bytes_per_device": self.collective_bytes,
+            "per_device": {
+                "pages_in_use": self.pages_in_use,
+                "kv_bytes": self.pages_in_use * page_bytes // self.tp,
+            },
+        }

@@ -50,6 +50,69 @@ def test_sanitize_spec_drops_indivisible_axes():
     assert sh._sanitize(P(("data", "model"),), (16,), sizes) == P("data")
 
 
+def test_sanitize_spec_pins_silent_drop_semantics():
+    """sanitize_spec's contract is *silent* axis dropping, never an error —
+    the sharded decode/train paths (and the TP serving specs built next to
+    them) lean on that for shapes a mesh axis doesn't divide. Pin the exact
+    semantics: per-dim independence, rank padding, tuple-prefix keeps in
+    declaration order."""
+    sizes = {"data": 8, "model": 4}
+    # spec shorter than the shape: missing dims are padded replicated
+    assert sh._sanitize(P("model"), (8, 12), sizes) == P("model", None)
+    # each dim is sanitized independently — one bad dim doesn't strip others
+    assert sh._sanitize(P("data", "model"), (7, 12), sizes) == P(None, "model")
+    # tuples keep the longest dividing prefix IN ORDER: over dim 8,
+    # ("data","model") keeps data (8|8) then drops model (8*4 does not
+    # divide 8), while ("model","data") keeps model (4|8) then drops data
+    assert sh._sanitize(P(("data", "model"),), (8,), sizes) == P("data")
+    assert sh._sanitize(P(("model", "data"),), (8,), sizes) == P("model")
+    # dropping is total when nothing divides
+    assert sh._sanitize(P(None, "model"), (3, 5), sizes) == P(None, None)
+    # size-1 mesh axes always survive (1 divides everything)
+    assert sh._sanitize(P("model",), (5,), {"model": 1}) == P("model")
+    # and a no-mesh context is the identity (sanitize_spec's public guard)
+    assert sh.sanitize_spec(P("data", "model"), (3, 5)) == P("data", "model")
+
+
+def test_param_pspecs_sanitize_on_undividable_shapes():
+    """param_pspecs + sanitize on an arch whose d_ff does not divide the
+    model axis: the tensor dim's sharding is dropped silently while every
+    dividing dim keeps its axis — the behavior the sharded decode path and
+    the serving TP engine assume when they feed jit mesh-divisible inputs."""
+    import dataclasses
+    from repro.configs import smoke_config
+    from repro.models import build_model
+    from repro.launch.mesh import make_host_mesh
+
+    arch = dataclasses.replace(smoke_config("llama3.2-3b"), d_ff=300)
+    model = build_model(arch)
+    params = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    # a 1x1 host mesh binds the axis *names*; divisibility is checked
+    # against the production axis sizes below
+    with sh.activate(make_host_mesh(1, 1), sh.make_rules()):
+        specs = sh.param_pspecs(params)
+    sizes = {"data": 16, "model": 16}
+    by_name = {}
+    for kp, spec in jax.tree_util.tree_leaves_with_path(
+            specs, is_leaf=lambda s: isinstance(s, P)):
+        by_name.setdefault(kp[-1].key, []).append(spec)
+    leaves = {kp[-1].key: leaf for kp, leaf in
+              jax.tree_util.tree_leaves_with_path(params)}
+
+    w1 = sh._sanitize(by_name["w1"][0], leaves["w1"].shape, sizes)
+    # d_model=128 divides 16 -> fsdp kept; d_ff=300 doesn't -> tensor dropped
+    assert w1[-2] == "data" and w1[-1] is None
+    w2 = sh._sanitize(by_name["w2"][0], leaves["w2"].shape, sizes)
+    assert w2[-2] is None and w2[-1] == "data"
+    # attention dims (q_dim=128) still divide: wq keeps both axes
+    wq = sh._sanitize(by_name["wq"][0], leaves["wq"].shape, sizes) \
+        if "wq" in by_name else None
+    wqkv = sh._sanitize(by_name["wqkv"][0], leaves["wqkv"].shape, sizes) \
+        if "wqkv" in by_name else None
+    kept = wq if wq is not None else wqkv
+    assert kept[-2] == "data" and kept[-1] == "model"
+
+
 def test_tp_fsdp_train_step_matches_single_device():
     """2x4 (data x model) sharded train step == unsharded, bit-for-bit-ish."""
     out = _run_subprocess(r"""

@@ -1,0 +1,119 @@
+"""tools/check_bench.py: the CI benchmark regression gate's compare logic.
+
+Pure-dict tests (no benchmark run): regressions beyond tolerance fail,
+improvements and in-tolerance noise pass, and a *partial* artifact — a
+baseline metric missing from the current result — fails rather than being
+skipped, which is the whole point of gating the upload.
+"""
+import copy
+import importlib.util
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def _load_check_bench():
+    spec = importlib.util.spec_from_file_location(
+        "check_bench", ROOT / "tools" / "check_bench.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+cb = _load_check_bench()
+
+BASELINE = {
+    "rates": {
+        "4": {"continuous": {"tok_s": 100.0}, "static": {"tok_s": 50.0}},
+        "inf": {"continuous": {"tok_s": 200.0}},
+    },
+    "shared_prefix": {
+        "off": {"tok_s": 60.0, "ttft_ms": 1000.0},
+        "on": {"tok_s": 80.0, "ttft_ms": 700.0},
+    },
+    "sampled": {"greedy": {"tok_s": 150.0}, "sampled": {"tok_s": 90.0}},
+}
+
+
+def _failed(rows):
+    return [r["metric"] for r in rows if not r["ok"]]
+
+
+def test_identical_results_pass():
+    assert _failed(cb.compare(copy.deepcopy(BASELINE), BASELINE, 0.2)) == []
+
+
+def test_metric_inventory_matches_baseline_sections():
+    paths = [m[0] for m in cb.iter_metrics(BASELINE)]
+    assert "rates.4.continuous.tok_s" in paths
+    assert "rates.inf.continuous.tok_s" in paths
+    assert "shared_prefix.on.ttft_ms" in paths
+    assert "sampled.sampled.tok_s" in paths
+    # static engine numbers are context, not gated
+    assert not any("static" in p for p in paths)
+
+
+def test_throughput_regression_beyond_tolerance_fails():
+    cur = copy.deepcopy(BASELINE)
+    cur["rates"]["inf"]["continuous"]["tok_s"] = 200.0 * 0.7   # -30%
+    assert _failed(cb.compare(cur, BASELINE, 0.2)) == \
+        ["rates.inf.continuous.tok_s"]
+
+
+def test_ttft_direction_is_inverted():
+    cur = copy.deepcopy(BASELINE)
+    cur["shared_prefix"]["on"]["ttft_ms"] = 700.0 * 1.5        # slower TTFT
+    assert _failed(cb.compare(cur, BASELINE, 0.2)) == \
+        ["shared_prefix.on.ttft_ms"]
+    # a FASTER TTFT (lower) of the same magnitude passes
+    cur["shared_prefix"]["on"]["ttft_ms"] = 700.0 * 0.5
+    assert _failed(cb.compare(cur, BASELINE, 0.2)) == []
+
+
+def test_within_tolerance_noise_passes():
+    cur = copy.deepcopy(BASELINE)
+    cur["rates"]["4"]["continuous"]["tok_s"] = 100.0 * 0.85    # -15% < 20%
+    cur["shared_prefix"]["off"]["ttft_ms"] = 1000.0 * 1.1
+    assert _failed(cb.compare(cur, BASELINE, 0.2)) == []
+
+
+def test_partial_artifact_fails_not_skips():
+    cur = {k: v for k, v in copy.deepcopy(BASELINE).items()
+           if k != "sampled"}
+    rows = cb.compare(cur, BASELINE, 0.2)
+    missing = [r for r in rows if not r["ok"]]
+    assert {r["metric"] for r in missing} == \
+        {"sampled.greedy.tok_s", "sampled.sampled.tok_s"}
+    assert all("MISSING" in r["note"] for r in missing)
+
+
+def test_extra_current_sections_are_ignored():
+    cur = copy.deepcopy(BASELINE)
+    cur["tensor_parallel"] = {"tp": 2, "diverged_streams": 0}
+    assert _failed(cb.compare(cur, BASELINE, 0.2)) == []
+
+
+def test_empty_baseline_fails_loudly():
+    rows = cb.compare({}, {}, 0.2)
+    assert _failed(rows) == ["<none>"]
+
+
+def test_cli_exit_codes(tmp_path):
+    import json
+    base = tmp_path / "base.json"
+    cur = tmp_path / "cur.json"
+    base.write_text(json.dumps(BASELINE))
+    cur.write_text(json.dumps(BASELINE))
+    assert cb.main([str(cur), str(base)]) == 0
+    bad = copy.deepcopy(BASELINE)
+    bad["sampled"]["greedy"]["tok_s"] = 1.0
+    cur.write_text(json.dumps(bad))
+    assert cb.main([str(cur), str(base)]) == 1
+    # committed baseline must itself pass the gate's schema
+    rows = cb.compare(
+        json.loads((ROOT / "benchmarks" / "baselines" /
+                    "serving.json").read_text()),
+        json.loads((ROOT / "benchmarks" / "baselines" /
+                    "serving.json").read_text()), 0.2)
+    assert _failed(rows) == []

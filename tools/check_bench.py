@@ -1,0 +1,130 @@
+#!/usr/bin/env python3
+"""Benchmark regression gate for the serving benchmark JSON artifact.
+
+Compares a fresh ``benchmarks.serving --json`` result against a committed
+baseline and fails (exit 1) on a regression beyond tolerance in any gated
+metric:
+
+- ``rates.<rate>.continuous.tok_s``      (throughput: lower is a regression)
+- ``shared_prefix.{off,on}.tok_s``
+- ``shared_prefix.{off,on}.ttft_ms``     (mean TTFT: higher is a regression)
+- ``sampled.{greedy,sampled}.tok_s``
+
+Every metric present in the *baseline* must exist in the current result —
+a silently missing section (a partial artifact) fails the gate too. Extra
+sections in the current result (e.g. ``tensor_parallel``) are ignored, so
+the baseline does not need regenerating when new sections land.
+
+Usage:
+    python tools/check_bench.py serving_bench.json \
+        benchmarks/baselines/serving.json [--tolerance 0.2]
+
+Re-baselining (numbers are machine-class specific — regenerate on the CI
+runner class, not a laptop): download ``serving_bench.json`` from a green CI
+run's artifacts and commit it as ``benchmarks/baselines/serving.json``, or
+locally:
+
+    PYTHONPATH=src python -m benchmarks.serving --requests 8 \
+        --json benchmarks/baselines/serving.json
+
+The tolerance is deliberately loose (default 20%, override with
+``--tolerance`` or the ``CHECK_BENCH_TOLERANCE`` env var): the gate exists
+to catch order-of-magnitude perf cliffs (a decode path falling off its
+compiled fast path, prefix caching silently disabled), not scheduler noise.
+No external dependencies — stdlib only, importable for unit tests.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, Iterator, List, Optional, Tuple
+
+# (metric path, value, direction); direction "higher" = bigger is better
+Metric = Tuple[str, float, str]
+
+
+def iter_metrics(baseline: dict) -> Iterator[Metric]:
+    """Yield every gated metric the baseline carries."""
+    for rate, d in baseline.get("rates", {}).items():
+        if "continuous" in d:
+            yield (f"rates.{rate}.continuous.tok_s",
+                   d["continuous"]["tok_s"], "higher")
+    for tag in ("off", "on"):
+        d = baseline.get("shared_prefix", {}).get(tag)
+        if d:
+            yield f"shared_prefix.{tag}.tok_s", d["tok_s"], "higher"
+            yield f"shared_prefix.{tag}.ttft_ms", d["ttft_ms"], "lower"
+    for tag in ("greedy", "sampled"):
+        d = baseline.get("sampled", {}).get(tag)
+        if d:
+            yield f"sampled.{tag}.tok_s", d["tok_s"], "higher"
+
+
+def lookup(result: dict, path: str) -> Optional[float]:
+    node = result
+    for key in path.split("."):
+        if not isinstance(node, dict) or key not in node:
+            return None
+        node = node[key]
+    return float(node) if isinstance(node, (int, float)) else None
+
+
+def compare(current: dict, baseline: dict,
+            tolerance: float) -> List[Dict[str, object]]:
+    """-> one row per gated metric: {metric, baseline, current, ok, note}."""
+    rows: List[Dict[str, object]] = []
+    for path, base, direction in iter_metrics(baseline):
+        cur = lookup(current, path)
+        if cur is None:
+            rows.append({"metric": path, "baseline": base, "current": None,
+                         "ok": False, "note": "MISSING from current result"})
+            continue
+        if direction == "higher":
+            ok = cur >= base * (1.0 - tolerance)
+        else:
+            ok = cur <= base * (1.0 + tolerance)
+        delta = (cur - base) / base if base else 0.0
+        rows.append({"metric": path, "baseline": base, "current": cur,
+                     "ok": ok, "note": f"{delta:+.1%}"})
+    if not rows:
+        rows.append({"metric": "<none>", "baseline": None, "current": None,
+                     "ok": False, "note": "baseline carries no gated metrics"})
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("current", help="fresh benchmarks.serving --json output")
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("--tolerance", type=float,
+                    default=float(os.environ.get("CHECK_BENCH_TOLERANCE",
+                                                 0.2)),
+                    help="allowed fractional regression (default 0.2)")
+    args = ap.parse_args(argv)
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    rows = compare(current, baseline, args.tolerance)
+    width = max(len(r["metric"]) for r in rows)
+    failed = [r for r in rows if not r["ok"]]
+    for r in rows:
+        status = "ok  " if r["ok"] else "FAIL"
+        base = "-" if r["baseline"] is None else f"{r['baseline']:.2f}"
+        cur = "-" if r["current"] is None else f"{r['current']:.2f}"
+        print(f"[check_bench] {status} {r['metric']:<{width}} "
+              f"base={base} cur={cur} ({r['note']})")
+    if failed:
+        print(f"[check_bench] {len(failed)}/{len(rows)} metrics regressed "
+              f"beyond {args.tolerance:.0%} — see docstring for how to "
+              "re-baseline after an intentional change", file=sys.stderr)
+        return 1
+    print(f"[check_bench] all {len(rows)} metrics within "
+          f"{args.tolerance:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
