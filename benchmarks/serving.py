@@ -20,6 +20,13 @@ and with per-request temperature/top-k/top-p (chat-shaped traffic), so the
 on-device sampler's overhead — two [slots, vocab] sorts plus the categorical
 draw per step — shows up as a tok/s delta instead of a guess.
 
+The ``families`` section serves the non-dense architectures the decode-state
+protocol opened up — pure-SSM mamba2, hybrid jamba, and token-choice
+deepseek-moe smoke configs — through the same continuous engine, recording
+tok/s, latency, and the per-family prefix-cache gate (forced off, with the
+recorded reason, for SSM-bearing archs). ``tools/check_bench.py`` requires
+this section in the baseline.
+
 With ``--tp N`` (N > 1; needs N devices — on CPU set
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N``) a fourth section
 serves the same trace through the tensor-parallel engine: tok/s vs tp=1, the
@@ -267,6 +274,44 @@ def run_sampled(model, params, n_requests, slots, results):
     results["sampled"] = out
 
 
+def run_families(n_requests, slots, results):
+    """Hybrid + MoE serving section: the decode-state protocol end to end.
+
+    Serves the same ragged greedy trace through the continuous engine on
+    three non-dense smoke archs — mamba2 (pure SSM: constant-size per-slot
+    state, no pages in HBM), jamba (hybrid: 1 attention layer per 8, paged
+    KV + slot state side by side), and deepseek-moe (token-choice MoE) —
+    and records tok/s, inter-token latency, prefill accounting, and the
+    per-family prefix-cache gate (SSM-bearing archs force it off; the
+    engine records the reason instead of silently no-op'ing)."""
+    out = {}
+    for name in ("mamba2-1.3b", "jamba-v0.1-52b", "deepseek-moe-16b"):
+        arch = smoke_config(name)
+        model = build_model(arch)
+        params = model.init(jax.random.key(0))
+        params = jax.tree.map(lambda p: p.astype(jnp.dtype(arch.dtype)),
+                              params)
+        trace = make_trace(n_requests, float("inf"), prompt_len=24,
+                           gen_range=(8, 32), seed=5)
+        times, _, wall, engine = run_continuous(model, params, trace, slots,
+                                                prefix_cache=True)
+        tag = name.split("-")[0]
+        out[name] = {
+            **summarize(times, wall),
+            "family": arch.family,
+            "prefill_tokens": engine.prefill_tokens,
+            "prefix_cache": ("off: " + engine.prefix_cache_off_reason
+                             if engine.prefix_cache_off_reason else "on"),
+        }
+        emit(f"serve_family_{tag}", wall * 1e6 / max(1, n_requests),
+             f"{out[name]['tok_s']:.1f}tok/s_p50={out[name]['p50_ms']:.1f}ms")
+        print(f"[serving] {name} ({arch.family}): "
+              f"{out[name]['tok_s']:.1f} tok/s, "
+              f"p50 {out[name]['p50_ms']:.1f} ms, "
+              f"prefix cache {out[name]['prefix_cache'].split(':')[0]}")
+    results["families"] = out
+
+
 def run_tp(model, params, n_requests, slots, tp, results):
     """Tensor-parallel section: the same mixed greedy/sampled trace served
     at tp=1 and tp=N. Streams must not diverge (head-sharded TP is an
@@ -331,6 +376,7 @@ def run(arch_name="llama3.2-3b", n_requests=16, slots=4,
         run_rates(model, params, n_requests, slots, rates, results)
         run_shared_prefix(model, params, n_requests, slots, results)
         run_sampled(model, params, n_requests, slots, results)
+        run_families(n_requests, slots, results)
     if tp > 1:
         run_tp(model, params, n_requests, slots, tp, results)
     if json_path:

@@ -7,7 +7,11 @@ continuous  ``repro.serving.ContinuousEngine``: paged KV cache + scheduler —
             requests are admitted/recycled mid-flight, prompts are ingested
             by chunked prefill, shared prompt prefixes are served from the
             refcounted prefix cache (``--no-prefix-cache`` to disable), and
-            live KV memory tracks actual generated lengths.
+            live KV memory tracks actual generated lengths. Serves every
+            decode-state-protocol family — dense, MoE, VLM, pure-SSM
+            (mamba2), hybrid (jamba) — with prefix caching auto-gated off
+            for SSM-bearing archs (recurrent state is not page-decomposable;
+            an explicit ``--prefix-cache`` is rejected up front).
 
 Sampling (``--temperature/--top-k/--top-p/--seed``) is valid for BOTH
 engines: request ``i`` gets ``SamplingParams(seed = --seed + i)`` and both
@@ -143,7 +147,10 @@ def _run_continuous(model, params, args, arch) -> dict:
     stats = {"tokens": out, "wall": wall, "steps": engine.steps,
              "prefills": engine.prefills,
              "prefill_tokens": engine.prefill_tokens,
-             "cached_prefill_tokens": engine.cached_prefill_tokens}
+             "cached_prefill_tokens": engine.cached_prefill_tokens,
+             "prefix_cache_off_reason": engine.prefix_cache_off_reason}
+    if engine.prefix_cache_off_reason:
+        print(f"[serve/continuous] {engine.prefix_cache_off_reason}")
     if args.tp > 1:
         tps = engine.tp_stats()
         print(f"[serve/continuous] tp={args.tp}: "
@@ -178,18 +185,22 @@ def main(argv=None) -> dict:
     # continuous-engine knobs
     ap.add_argument("--tp", type=int, default=1,
                     help="tensor-parallel degree over a 1-D device mesh "
-                         "(continuous engine only; must divide the arch's "
-                         "query AND kv head counts; on CPU set XLA_FLAGS="
-                         "--xla_force_host_platform_device_count=N)")
+                         "(continuous engine only; must divide the query "
+                         "heads and either divide or be a multiple of the "
+                         "KV heads — the latter replicates KV shards; MoE "
+                         "experts shard expert-parallel; on CPU set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count)")
     ap.add_argument("--slots", type=int, default=0,
                     help="decode slots (default: --batch)")
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--num-pages", type=int, default=0,
                     help="KV pool pages (default: sized to the request set)")
     ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
-                    default=True,
+                    default=None,
                     help="share cached prompt-prefix pages across requests "
-                         "(--no-prefix-cache to disable)")
+                         "(default: on for attention-only archs; forced off "
+                         "for SSM-bearing archs, whose recurrent decode "
+                         "state is not page-decomposable)")
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="chunked-prefill tokens per step, a page multiple "
                          "(default: 4 pages)")
@@ -209,6 +220,26 @@ def main(argv=None) -> dict:
 
     arch = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     assert not arch.bidirectional, "encoder-only archs have no decode step"
+    if args.engine == "continuous":
+        from ..serving.engine import SERVABLE_FAMILIES
+        if arch.family not in SERVABLE_FAMILIES:
+            ap.error(f"--engine continuous serves families "
+                     f"{SERVABLE_FAMILIES}; {arch.name} is {arch.family!r} "
+                     "(use --engine static)")
+    # an EXPLICIT --prefix-cache on an SSM-bearing arch fails here with the
+    # reason, not as an assertion deep in the engine (the static engine has
+    # no prefix cache; the flag only gates continuous). The default stays
+    # True so the engine itself performs the SSM gate and records the
+    # reason in every result — resolving it to False here would skip that
+    # marker and turn the gate into the silent no-op it must never be.
+    if args.prefix_cache and arch.family in ("ssm", "hybrid") \
+            and args.engine == "continuous":
+        ap.error(f"--prefix-cache is unsupported for {arch.family} archs "
+                 f"({arch.name}): SSM recurrent decode state is not "
+                 "page-decomposable, so cached KV pages cannot be shared; "
+                 "rerun without --prefix-cache")
+    if args.prefix_cache is None:
+        args.prefix_cache = True
     model = build_model(arch)
     params = model.init(jax.random.key(args.seed))
     params = jax.tree.map(lambda p: p.astype(jnp.dtype(arch.dtype)), params)

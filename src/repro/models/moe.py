@@ -65,11 +65,20 @@ def init_moe(key, arch: ArchConfig, dtype=jnp.float32) -> PyTree:
 
 # ------------------------------------------------------------------ sort dispatch -
 
-def _route_indices(logits: jax.Array, moe: MoEConfig, capacity: int):
+def _route_indices(logits: jax.Array, moe: MoEConfig, capacity: int,
+                   eff_capacity: Optional[jax.Array] = None):
     """Per-batch-row routing *index* math (cheap int ops; vmapped over rows).
 
     logits [S, E] fp32 -> (st [S*k] source token ids, sw [S*k] weights,
     slot [S*k] capacity-slot ids incl. overflow sentinel, valid [S*k]).
+
+    ``capacity`` sizes the dispatch buffer (static); ``eff_capacity`` — a
+    traced scalar — optionally *tightens* the drop threshold below it. The
+    chunked-prefill path passes the full prompt's capacity here so a prompt
+    served in one padded chunk reproduces the static engine's drop pattern
+    exactly: the chunk's trailing padding cannot displace real tokens (the
+    stable expert sort keeps padded entries after every real one), but the
+    padded shape would otherwise inflate the capacity bucket.
     """
     s, e = logits.shape
     probs = jax.nn.softmax(logits, axis=-1)                   # [S, E]
@@ -84,41 +93,71 @@ def _route_indices(logits: jax.Array, moe: MoEConfig, capacity: int):
     se, st, sw = flat_e[order], flat_t[order], flat_w[order]
     start = jnp.searchsorted(se, jnp.arange(e), side="left")  # [E]
     pos = jnp.arange(s * moe.top_k) - start[se]
-    valid = pos < capacity
+    limit = capacity if eff_capacity is None \
+        else jnp.minimum(capacity, eff_capacity)
+    valid = pos < limit
     slot = jnp.where(valid, se * capacity + pos, e * capacity)
     return st, sw, slot, valid
 
 
-def apply_moe(arch: ArchConfig, p: PyTree, x: jax.Array
+def apply_moe(arch: ArchConfig, p: PyTree, x: jax.Array,
+              tp_axis: Optional[str] = None,
+              eff_capacity: Optional[jax.Array] = None
               ) -> Tuple[jax.Array, jax.Array]:
-    """x [B, S, D] -> (y [B, S, D], aux_loss scalar)."""
+    """x [B, S, D] -> (y [B, S, D], aux_loss scalar).
+
+    ``tp_axis``: serving tensor parallelism — the call runs inside
+    ``shard_map`` on a shard holding ``num_experts / tp`` contiguous experts
+    (leading axis of ``p["experts"]``), the router and activations
+    replicated. Routing stays global (every shard sees the full top-k over
+    all E experts); each shard dispatches, computes, and combines only the
+    capacity slots of the experts it owns, and the partial combines meet in
+    one fp32 psum — the MoE layer's single collective, in place of the dense
+    MLP's row-parallel reduce.
+
+    ``eff_capacity`` (traced scalar): tightens the per-row drop threshold
+    below the buffer capacity. The chunked-prefill path passes the full
+    prompt's ``capacity_per_row`` so a single-chunk prompt drops exactly the
+    tokens the static engine's full-prompt dispatch would drop, instead of
+    a bucket inflated by the chunk's padded shape.
+    """
     moe = arch.moe
     b, s, d = x.shape
     cap = capacity_per_row(s, moe)
     with jax.named_scope("moe"):
-        return _apply_moe_inner(arch, p, x, moe, cap)
+        return _apply_moe_inner(arch, p, x, moe, cap, tp_axis, eff_capacity)
 
 
-def _apply_moe_inner(arch, p, x, moe, cap):
+def _apply_moe_inner(arch, p, x, moe, cap, tp_axis=None, eff_capacity=None):
     b, s, d = x.shape
     e = moe.num_experts
+    w = p["experts"]
+    local_e = w["w1"].shape[0]          # experts this shard owns (== e at tp=1)
     logits = (x.astype(jnp.float32) @ p["router"])            # [B, S, E]
 
     st, sw, slot, valid = jax.vmap(
-        lambda lr: _route_indices(lr, moe, cap))(logits)      # each [B, S*k]
+        lambda lr: _route_indices(lr, moe, cap, eff_capacity))(logits)
+    if tp_axis is not None:
+        # expert parallelism under shard_map: rebase global capacity-slot ids
+        # onto this shard's experts; slots owned elsewhere fold into the
+        # overflow sentinel so they neither dispatch nor combine here
+        off = jax.lax.axis_index(tp_axis) * local_e * cap
+        slot = slot - off
+        valid = valid & (slot >= 0) & (slot < local_e * cap)
+        slot = jnp.where(valid, slot, local_e * cap)
 
     def dispatch_row(xr, st_r, slot_r, valid_r):
         gathered = xr[st_r] * valid_r[:, None].astype(xr.dtype)   # [S*k, D]
-        slots_r = jnp.zeros((e * cap + 1, d), xr.dtype)
+        slots_r = jnp.zeros((local_e * cap + 1, d), xr.dtype)
         slots_r = slots_r.at[slot_r].add(gathered)
-        return slots_r[:-1].reshape(e, cap, d)
+        return slots_r[:-1].reshape(local_e, cap, d)
 
-    slots = jax.vmap(dispatch_row)(x, st, slot, valid)        # [B, E, C, D]
+    slots = jax.vmap(dispatch_row)(x, st, slot, valid)        # [B, El, C, D]
 
-    # expert parallelism: slots all-to-all from [B->data] row-local layout into
-    # [E->model] expert-owner layout; each device runs its E/16 experts' GEMMs
+    # expert parallelism (training/pjit path): slots all-to-all from
+    # [B->data] row-local layout into [E->model] expert-owner layout; each
+    # device runs its E/16 experts' GEMMs. (Identity inside shard_map.)
     slots = constrain(slots, "batch", "experts", None, None)
-    w = p["experts"]
     act = silu if arch.mlp == "swiglu" else gelu
     h = act(jnp.einsum("becd,edf->becf", slots, w["w1"].astype(x.dtype)))
     if arch.mlp == "swiglu":
@@ -129,7 +168,8 @@ def _apply_moe_inner(arch, p, x, moe, cap):
 
     def combine_row(out_r, st_r, sw_r, slot_r, valid_r):
         flat = jnp.concatenate(
-            [out_r.reshape(e * cap, d), jnp.zeros((1, d), out_r.dtype)], 0)
+            [out_r.reshape(local_e * cap, d), jnp.zeros((1, d), out_r.dtype)],
+            0)
         contrib = flat[slot_r] * (sw_r * valid_r).astype(out_r.dtype)[:, None]
         y_r = jnp.zeros((s, d), out_r.dtype)
         return y_r.at[st_r].add(contrib)
@@ -138,9 +178,14 @@ def _apply_moe_inner(arch, p, x, moe, cap):
     y = constrain(y, "batch", "seq", None)
 
     if "shared" in p:
+        # shared experts are a dense MLP: under tp_axis their weights are the
+        # usual Megatron column/row shards, and the row-parallel partial sum
+        # rides the same psum as the routed combine below
         sh = p["shared"]
         hs = silu(x @ sh["w1"].astype(x.dtype)) * (x @ sh["w3"].astype(x.dtype))
         y = y + hs @ sh["w2"].astype(x.dtype)
+    if tp_axis is not None:
+        y = jax.lax.psum(y.astype(jnp.float32), tp_axis).astype(x.dtype)
 
     # Switch-style load-balancing aux loss: E * sum_e f_e * P_e
     probs = jax.nn.softmax(logits, axis=-1)                   # [B,S,E] fp32

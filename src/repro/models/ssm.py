@@ -12,6 +12,7 @@ All decay/cum-sum math in fp32.
 """
 from __future__ import annotations
 
+import math
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -306,3 +307,92 @@ def decode_mamba(arch: ArchConfig, p: PyTree, u: jax.Array, cache: PyTree
     y = _gated_rmsnorm(y, z, p["norm_scale"])
     out = (y @ p["out_proj"].astype(u.dtype))[:, None]
     return out, {"conv": window[:, 1:], "state": new_state}
+
+
+# --------------------------------------------------- serving decode-state path ----
+#
+# The continuous engine's per-layer decode-state protocol: a mamba mixer's
+# state is NOT page-decomposable (the recurrence folds every past token into
+# one [H, N, P] state), so instead of KV pages it declares a *pooled,
+# constant-size per-slot* state — ``init_mamba_cache(arch, num_slots, dtype)``
+# shapes: conv tail [slot, W-1, C] + SSD state [slot, H, N, P] fp32. A slot
+# is recycled by resetting its rows (the ``start == 0`` gate below), and
+# preemption is plain forced replay: re-prefilling the victim's context
+# recomputes the state, so the resumed stream is token-identical.
+
+def paged_prefill_mamba_layer(arch: ArchConfig, p: PyTree, x: jax.Array,
+                              cache: PyTree, slot: jax.Array,
+                              start: jax.Array, total_len: jax.Array
+                              ) -> Tuple[jax.Array, PyTree]:
+    """One prompt chunk of one sequence through a mamba mixer.
+
+    x [1, C, D] — chunk embeddings (row i at absolute position start + i;
+    rows past ``total_len - start`` are padding); ``slot`` indexes the
+    per-slot state pools. The chunk tail's padding must not perturb the
+    recurrent state, and masking it costs nothing extra: a padded position's
+    ``dt`` is forced to 0, which makes its state decay exp(dt*a) = 1 (an
+    identity pass-through) and its input contribution x*dt = 0 — the SSD
+    update over the chunk lands on exactly the state after the last *valid*
+    token. ``start == 0`` (fresh admission or forced-replay re-prefill)
+    resets the slot's rows, which is all the slot recycling SSM state needs.
+    """
+    s = arch.ssm
+    b, c, _ = x.shape
+    assert b == 1, "chunked prefill runs one sequence at a time"
+    inner = inner_dim(arch)
+    h = num_ssm_heads(arch)
+    width = s.conv_width
+    zxbcdt = x[0] @ p["in_proj"].astype(x.dtype)             # [C, proj]
+    z, xin, bb, cc, dt = _split_proj(arch, zxbcdt)
+    xbc = jnp.concatenate([xin, bb, cc], axis=-1)            # [C, Cch]
+    continuing = start > 0          # start == 0 -> reset the recycled slot
+    conv_tail = jnp.where(continuing, cache["conv"][slot], 0).astype(xbc.dtype)
+    state0 = jnp.where(continuing, cache["state"][slot], 0.0)  # [H,N,P] fp32
+    ctx = jnp.concatenate([conv_tail, xbc], axis=0)          # [W-1+C, Cch]
+    conv_out = jnp.zeros((c, xbc.shape[-1]), jnp.float32)
+    for i in range(width):
+        conv_out = conv_out + ctx[i:i + c].astype(jnp.float32) * \
+            p["conv"][i][None].astype(jnp.float32)
+    xbc = silu(conv_out.astype(x.dtype))
+    xin, bb, cc = jnp.split(xbc, [inner, inner + s.ngroups * s.state_dim],
+                            axis=-1)
+    pos = jnp.asarray(start, jnp.int32) + jnp.arange(c, dtype=jnp.int32)
+    valid = pos < total_len
+    dt = softplus(dt.astype(jnp.float32) + p["dt_bias"][None, :])
+    dt = jnp.where(valid[:, None], dt, 0.0)                  # mask padding
+    a = -jnp.exp(p["A_log"])
+    xh = xin.reshape(1, c, h, s.head_dim)
+    # the chunk length is static; gcd keeps the SSD divisibility contract for
+    # any page-multiple prefill chunk
+    chunk = math.gcd(s.chunk, c)
+    y, final = ssd_chunked(xh, dt[None], a,
+                           bb.reshape(1, c, s.ngroups, s.state_dim),
+                           cc.reshape(1, c, s.ngroups, s.state_dim),
+                           chunk, initial_state=state0[None])
+    y = y + xh * p["D"][None, None, :, None].astype(y.dtype)
+    y = _gated_rmsnorm(y.reshape(1, c, inner), z[None], p["norm_scale"])
+    out = y @ p["out_proj"].astype(x.dtype)
+    # conv tail = the W-1 inputs ending at the last valid token: ctx index
+    # j >= W-1 is chunk position j-(W-1), so the slice starts at (valid count)
+    new_tail = jax.lax.dynamic_slice_in_dim(
+        ctx, total_len - start, width - 1, axis=0)
+    return out, {
+        "conv": cache["conv"].at[slot].set(new_tail.astype(cache["conv"].dtype)),
+        "state": cache["state"].at[slot].set(final[0]),
+    }
+
+
+def paged_decode_mamba_layer(arch: ArchConfig, p: PyTree, x: jax.Array,
+                             cache: PyTree, active: jax.Array
+                             ) -> Tuple[jax.Array, PyTree]:
+    """One-token decode over the full slot batch. x [S, 1, D]; cache rows are
+    per-slot; ``active`` [S] masks the state update — an inactive slot (empty,
+    or mid-prefill and masked out of this decode step) must keep its state:
+    unlike KV pages there is no null-page write sink, the state row IS the
+    sink, so the engine's fixed-shape step guards it explicitly."""
+    y, new = decode_mamba(arch, p, x, cache)
+    return y, {
+        "conv": jnp.where(active[:, None, None], new["conv"], cache["conv"]),
+        "state": jnp.where(active[:, None, None, None], new["state"],
+                           cache["state"]),
+    }

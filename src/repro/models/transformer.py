@@ -209,29 +209,51 @@ def init_caches(arch: ArchConfig, batch: int, max_len: int, dtype) -> PyTree:
     return {f"period_{z}": one_period() for z in range(nper)}
 
 
-def init_paged_caches(arch: ArchConfig, num_pages: int, page_size: int,
-                      dtype) -> PyTree:
-    """Per-attention-layer page pools, stacked like ``init_caches``.
+def init_serving_state(arch: ArchConfig, num_pages: int, page_size: int,
+                       num_slots: int, dtype) -> PyTree:
+    """Per-layer decode state for the continuous engine, stacked like
+    ``init_caches`` — the decode-state protocol's device side.
 
-    Every layer shares one logical page table: a sequence's page ids index the
-    same slots of every layer's pool, so the allocator hands out ids once and
-    the whole stack follows (vLLM's layout). Attention-free mixers are not
-    supported on the paged path — the engine enforces attention-only archs.
+    Each layer kind declares its own state:
+
+    - ``attn``  : a paged KV pool ``{k, v}: [P, page, Hkv, Dh]``. Every
+      attention layer shares one logical page table — a sequence's page ids
+      index the same rows of every layer's pool, so the allocator hands out
+      ids once and the whole stack follows (vLLM's layout).
+    - ``mamba`` : a pooled, constant-size per-*slot* state
+      ``{conv: [slot, W-1, C], state: [slot, H, N, P]}`` — the recurrence
+      folds all history into fixed-size state, so it is allocated per decode
+      slot, not per page, and costs nothing as context grows.
     """
-    kinds = layer_kinds(arch)
-    assert all(m == "attn" for m, _ in kinds), \
-        f"paged caches need attention-only stacks, got {kinds} ({arch.name})"
     assert arch.family != "encdec", "paged path has no cross-attention cache"
+    kinds = layer_kinds(arch)
+
+    def layer_state(mixer):
+        if mixer == "attn":
+            return attn_lib.init_paged_kv_cache(arch, num_pages, page_size,
+                                                dtype)
+        return ssm_lib.init_mamba_cache(arch, num_slots, dtype)
 
     def one_period():
-        return {f"layer_{i}": attn_lib.init_paged_kv_cache(
-            arch, num_pages, page_size, dtype) for i in range(len(kinds))}
+        return {f"layer_{i}": layer_state(m)
+                for i, (m, _) in enumerate(kinds)}
     nper = arch.num_layers // period_length(arch)
     if arch.scan_layers and nper > 1:
         per = one_period()
         return jax.tree.map(
             lambda l: jnp.broadcast_to(l[None], (nper,) + l.shape).copy(), per)
     return {f"period_{z}": one_period() for z in range(nper)}
+
+
+def init_paged_caches(arch: ArchConfig, num_pages: int, page_size: int,
+                      dtype) -> PyTree:
+    """Attention-only page pools (the pre-protocol surface, kept for callers
+    that size pure KV pools); mixed stacks go through ``init_serving_state``.
+    """
+    kinds = layer_kinds(arch)
+    assert all(m == "attn" for m, _ in kinds), \
+        f"paged caches need attention-only stacks, got {kinds} ({arch.name})"
+    return init_serving_state(arch, num_pages, page_size, 0, dtype)
 
 
 def _decode_block_mix(arch: ArchConfig, blk: PyTree, x: jax.Array, mix_fn
@@ -245,17 +267,20 @@ def _decode_block_mix(arch: ArchConfig, blk: PyTree, x: jax.Array, mix_fn
 
 
 def _decode_block_ffn(arch: ArchConfig, blk: PyTree, x: jax.Array,
-                      tp_axis: Optional[str] = None) -> jax.Array:
+                      tp_axis: Optional[str] = None,
+                      moe_eff_cap: Optional[jax.Array] = None) -> jax.Array:
     """Shared MoE/MLP tail of a decode block (no-op for mamba2 blocks).
     ``tp_axis``: serving tensor parallelism — the MLP runs on Megatron
-    shards and psums its row-parallel output (MoE has no TP path; the
-    engine rejects MoE archs at tp > 1)."""
+    shards and psums its row-parallel output; a MoE block runs its
+    expert-parallel path (experts sharded on the leading axis, one psum on
+    the combine). ``moe_eff_cap`` (prefill chunks): the full prompt's
+    capacity, so drops match the static engine's full-prompt dispatch
+    rather than a bucket inflated by the chunk's padded shape."""
     if arch.family == "ssm":
         return x
     h = x if arch.post_norm else apply_norm(arch.norm, blk["ln2"], x)
     if "moe" in blk:
-        assert tp_axis is None, "no TP path for MoE blocks"
-        y, _ = moe_lib.apply_moe(arch, blk["moe"], h)
+        y, _ = moe_lib.apply_moe(arch, blk["moe"], h, tp_axis, moe_eff_cap)
     else:
         y = apply_mlp(arch.mlp, blk["mlp"], h, tp_axis)
     return apply_norm(arch.norm, blk["ln2"], x + y) if arch.post_norm else x + y
@@ -267,14 +292,20 @@ def paged_decode_period(arch: ArchConfig, p: PyTree, cache: PyTree,
                         tp_axis: Optional[str] = None
                         ) -> Tuple[jax.Array, PyTree]:
     new_cache: PyTree = {}
-    for i in range(period_length(arch)):
+    # a slot with seq_len 0 is empty or mid-prefill: attention routes its
+    # writes to the null page; mamba layers must instead keep their state row
+    active = seq_lens > 0
+    for i, (mixer, _) in enumerate(layer_kinds(arch)):
         x = constrain(x, "batch", None, None)
         blk = p[f"layer_{i}"]
 
-        def mix(h, blk=blk, i=i):
-            return attn_lib.paged_decode_attention_layer(
-                arch, blk["attn"], h, cache[f"layer_{i}"], page_table,
-                seq_lens, mrope_positions, tp_axis)
+        def mix(h, blk=blk, i=i, mixer=mixer):
+            if mixer == "attn":
+                return attn_lib.paged_decode_attention_layer(
+                    arch, blk["attn"], h, cache[f"layer_{i}"], page_table,
+                    seq_lens, mrope_positions, tp_axis)
+            return ssm_lib.paged_decode_mamba_layer(
+                arch, blk["mamba"], h, cache[f"layer_{i}"], active)
         x, new_cache[f"layer_{i}"] = _decode_block_mix(arch, blk, x, mix)
         x = _decode_block_ffn(arch, blk, x, tp_axis)
     return x, new_cache
@@ -306,20 +337,36 @@ def paged_decode_stack(arch: ArchConfig, stacked: PyTree, caches: PyTree,
 
 def paged_prefill_period(arch: ArchConfig, p: PyTree, cache: PyTree,
                          x: jax.Array, page_row: jax.Array, start: jax.Array,
-                         total_len: jax.Array, mrope_positions=None,
+                         total_len: jax.Array, slot: jax.Array,
+                         moe_cap: Optional[jax.Array] = None,
+                         mrope_positions=None,
                          tp_axis: Optional[str] = None
                          ) -> Tuple[jax.Array, PyTree]:
     new_cache: PyTree = {}
-    for i in range(period_length(arch)):
+    # MoE capacity for a prompt chunk: the FULL context's bucket (computed
+    # host-side by the engine with the same math as the static path), not
+    # the padded chunk shape's. The trailing padding itself is harmless —
+    # the stable expert sort keeps padded entries behind every real token —
+    # but the chunk shape would otherwise inflate the drop threshold away
+    # from the static engine's, so a prompt that fits one chunk drops
+    # exactly what a full-prompt dispatch would. Longer prompts still
+    # re-bucket per chunk (documented caveat).
+    moe_eff_cap = moe_cap if arch.moe is not None else None
+    for i, (mixer, _) in enumerate(layer_kinds(arch)):
         x = constrain(x, "batch", None, None)
         blk = p[f"layer_{i}"]
 
-        def mix(h, blk=blk, i=i):
-            return attn_lib.paged_prefill_attention_layer(
-                arch, blk["attn"], h, cache[f"layer_{i}"], page_row, start,
-                total_len, mrope_positions, tp_axis)
+        def mix(h, blk=blk, i=i, mixer=mixer):
+            if mixer == "attn":
+                return attn_lib.paged_prefill_attention_layer(
+                    arch, blk["attn"], h, cache[f"layer_{i}"], page_row,
+                    start, total_len, mrope_positions, tp_axis)
+            return ssm_lib.paged_prefill_mamba_layer(
+                arch, blk["mamba"], h, cache[f"layer_{i}"], slot, start,
+                total_len)
         x, new_cache[f"layer_{i}"] = _decode_block_mix(arch, blk, x, mix)
-        x = _decode_block_ffn(arch, blk, x, tp_axis)
+        x = _decode_block_ffn(arch, blk, x, tp_axis,
+                              moe_eff_cap=moe_eff_cap)
     return x, new_cache
 
 
@@ -335,28 +382,35 @@ def chunk_final_hidden(x: jax.Array, start: jax.Array,
 
 def paged_prefill_stack(arch: ArchConfig, stacked: PyTree, caches: PyTree,
                         x: jax.Array, page_row: jax.Array, start: jax.Array,
-                        total_len: jax.Array, mrope_positions=None,
+                        total_len: jax.Array, slot: jax.Array = None,
+                        moe_cap: Optional[jax.Array] = None,
+                        mrope_positions=None,
                         tp_axis: Optional[str] = None
                         ) -> Tuple[jax.Array, PyTree]:
     """Chunked prefill: one prompt chunk [1, C, D] of one sequence through
-    the stack, K/V written straight into the sequence's pages. The caller
-    slices the sampling position out of the returned activations with
-    ``chunk_final_hidden``."""
+    the stack — attention K/V written straight into the sequence's pages,
+    mamba state advanced in the sequence's slot row (``slot``; only needed
+    for SSM-bearing stacks), MoE layers dropping at the full context's
+    capacity (``moe_cap``, host-computed; only read for MoE-bearing
+    stacks). The caller slices the sampling position out of the returned
+    activations with ``chunk_final_hidden``."""
+    if slot is None:
+        slot = jnp.zeros((), jnp.int32)
     if isinstance(stacked, dict) and any(k.startswith("period_") for k in stacked):
         new_caches: PyTree = {}
         for z in range(len(stacked)):
             x, nc = paged_prefill_period(arch, stacked[f"period_{z}"],
                                          caches[f"period_{z}"], x, page_row,
-                                         start, total_len, mrope_positions,
-                                         tp_axis)
+                                         start, total_len, slot, moe_cap,
+                                         mrope_positions, tp_axis)
             new_caches[f"period_{z}"] = nc
         return x, new_caches
 
     def scan_body(h, inputs):
         period_params, cache = inputs
         h, new_cache = paged_prefill_period(arch, period_params, cache, h,
-                                            page_row, start, total_len,
-                                            mrope_positions, tp_axis)
+                                            page_row, start, total_len, slot,
+                                            moe_cap, mrope_positions, tp_axis)
         return h, new_cache
     x, new_caches = jax.lax.scan(scan_body, x, (stacked, caches))
     return x, new_caches

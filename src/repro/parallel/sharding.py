@@ -336,25 +336,41 @@ _SERVING_TP_RULES: Dict[str, Tuple[Optional[str], ...]] = {
     "w2": ("model", None),      # row-parallel: partial sums -> psum
 }
 
+# under an "experts" parent the matrices carry a leading [E, ...] expert dim:
+# E -> model (expert parallelism), the per-expert GEMM dims whole — each
+# shard owns E/tp complete experts and the combine meets in one psum.
+# ("shared" experts are a plain dense MLP and take the column/row rules.)
+_SERVING_EXPERT_RULES: Dict[str, Tuple[Optional[str], ...]] = {
+    "w1": ("model", None, None),
+    "w3": ("model", None, None),
+    "w2": ("model", None, None),
+}
+
 
 def serving_param_pspecs(params) -> object:
     """PartitionSpec pytree for the TP serving engine (shard_map in_specs).
 
-    Attention/MLP projections follow ``_SERVING_TP_RULES``; every other leaf
-    — embedding, lm head, norms, row-parallel biases — is replicated, so the
-    logits (and therefore the sampler's draws) are computed identically on
-    every shard and the emitted token vector needs no collective at all.
-    Fused ``wqkv``/``bqkv`` leaves are rejected: a contiguous slice of the
-    fused feature dim would mix q and kv columns — the engine splits them
-    into wq/wk/wv before sharding (``serving.engine._split_fused_qkv``).
+    Attention/MLP projections follow ``_SERVING_TP_RULES``; routed-expert
+    weights shard E-major per ``_SERVING_EXPERT_RULES``; every other leaf —
+    embedding, lm head, norms, router, mamba mixers, row-parallel biases —
+    is replicated, so the logits (and therefore the sampler's draws) are
+    computed identically on every shard and the emitted token vector needs
+    no collective at all. Fused ``wqkv``/``bqkv`` leaves are rejected: a
+    contiguous slice of the fused feature dim would mix q and kv columns —
+    the engine splits them into wq/wk/wv before sharding
+    (``serving.engine._split_fused_qkv``).
     """
     def leaf_spec(key_path, leaf):
-        name = _path_names(key_path)[-1]
+        names = _path_names(key_path)
+        name = names[-1]
         if name in ("wqkv", "bqkv"):
             raise ValueError(
                 "fused qkv cannot be head-sharded; split into wq/wk/wv first "
-                f"({'/'.join(_path_names(key_path))})")
-        logical = _SERVING_TP_RULES.get(name)
+                f"({'/'.join(names)})")
+        if "experts" in names[:-1] and name in _SERVING_EXPERT_RULES:
+            logical = _SERVING_EXPERT_RULES[name]
+        else:
+            logical = _SERVING_TP_RULES.get(name)
         if logical is None:
             return P(*([None] * leaf.ndim))
         pad = leaf.ndim - len(logical)
@@ -363,17 +379,35 @@ def serving_param_pspecs(params) -> object:
     return jax.tree_util.tree_map_with_path(leaf_spec, params)
 
 
+# leaf names of the serving decode-state tree — the one definition shared by
+# the pspec builder here and the engine's CoW page copy / KV-head-replication
+# transforms (a new paged layer kind must extend these, nowhere else)
+PAGED_STATE_LEAVES = ("k", "v")         # per-page KV pools [P, page, Hkv, Dh]
+SLOT_STATE_LEAVES = ("conv", "state")   # per-slot mamba state
+
+
 def paged_pool_pspecs(pools) -> object:
-    """Head-shard the paged KV pools for TP serving: every pool leaf is
-    [P, page, Hkv, Dh] (scanned stacks carry a leading period axis), and the
-    KV-head axis — always ndim-2 — goes to "model". Page ids stay global:
-    each shard holds the same pages, 1/tp of every page's heads, so one host
-    allocator/page table drives all shards."""
-    def leaf_spec(leaf):
-        spec = [None] * leaf.ndim
-        spec[-2] = "model"
-        return P(*spec)
-    return jax.tree.map(leaf_spec, pools)
+    """Shard the engine's per-layer decode state for TP serving.
+
+    Attention page pools (``PAGED_STATE_LEAVES``, [P, page, Hkv, Dh];
+    scanned stacks carry a leading period axis) shard the KV-head axis —
+    always ndim-2 — on "model". Page ids stay global: each shard holds the
+    same pages, 1/tp of every page's heads, so one host allocator/page
+    table drives all shards. Mamba slot-state leaves (``SLOT_STATE_LEAVES``)
+    stay replicated: the mixer's weights are replicated, every shard
+    advances the identical recurrence, and the state is too small to be
+    worth the collectives sharding it would cost."""
+    def leaf_spec(key_path, leaf):
+        name = _path_names(key_path)[-1]
+        if name in PAGED_STATE_LEAVES:
+            spec = [None] * leaf.ndim
+            spec[-2] = "model"
+            return P(*spec)
+        if name in SLOT_STATE_LEAVES:
+            return P(*([None] * leaf.ndim))
+        raise KeyError(f"no serving-state sharding rule for "
+                       f"{'/'.join(_path_names(key_path))}")
+    return jax.tree_util.tree_map_with_path(leaf_spec, pools)
 
 
 def shard_map_tp(f, mesh: Mesh, in_specs, out_specs):

@@ -13,10 +13,16 @@
 - ``engine``    : ``ContinuousEngine`` — fixed-shape jitted chunked-prefill /
                   decode steps driven by the scheduler, so requests join and
                   leave mid-flight without recompilation and long prompts
-                  never stall running decodes; ``tp > 1`` runs those steps
-                  under shard_map on a 1-D mesh with head-sharded page pools
-                  and Megatron projections (two all-reduces per layer),
-                  token-identical to the single-device engine
+                  never stall running decodes. Layers plug in through a
+                  per-layer decode-state protocol (paged KV pools for
+                  attention mixers; pooled per-slot conv/SSD state for mamba
+                  mixers), so dense, MoE, VLM, pure-SSM, and hybrid families
+                  all serve on the same engine; ``tp > 1`` runs the steps
+                  under shard_map on a 1-D mesh with head-sharded (or, at
+                  tp > Hkv, head-replicated) page pools, Megatron
+                  projections, and expert-parallel MoE (one psum per
+                  attention/FFN output), token-identical to the
+                  single-device engine
 """
 from .engine import ContinuousEngine
 from .kv_cache import PageAllocator, PagedCacheState, pages_needed

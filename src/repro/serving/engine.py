@@ -1,6 +1,21 @@
 """ContinuousEngine: sampling-capable serving with continuous batching,
 prefix caching, and chunked prefill.
 
+The engine drives the stack through a generic per-layer **decode-state
+protocol** (``models.transformer.init_serving_state``): each layer kind
+declares its own decode state and its prefill/decode apply. Attention
+mixers declare paged KV pools (``[P, page, Hkv, Dh]``, indexed by the
+shared page table); mamba mixers declare a pooled, constant-size per-*slot*
+state (conv tail + ``[slot, H, N, P]`` SSD state) — recurrent state folds
+all history into fixed size, so it rides the decode slot, not pages. That
+one protocol serves dense, MoE, VLM, pure-SSM (mamba2), and hybrid (jamba)
+families with the same scheduler: slot recycling resets a mamba row at the
+next sequence's first chunk, and preemption stays forced replay — the SSM
+state is recomputed by re-prefilling the victim's context, so resume is
+token-identical. Prefix caching shares *pages*, which recurrent state is
+not decomposable into, so SSM-bearing archs gate it off with an explicit
+reason on the engine and in every request's result (never a silent no-op).
+
 Shapes the compiler sees are fixed — decode always runs the full
 ``num_slots`` batch against the same page pools and a [num_slots, max_pages]
 page table — so requests join and leave mid-flight without recompiling.
@@ -24,12 +39,18 @@ device mesh: the page pools are *head-sharded* (each device owns
 ``num_kv_heads / tp`` heads of every physical page, so page ids — and
 therefore the host-side ``PageAllocator``/``PrefixIndex``/scheduler — stay
 global and unchanged), the attention/MLP projections are Megatron shards,
-and the decode/prefill/copy steps run under ``shard_map`` with exactly two
-all-reduces per layer (attention output, MLP output). Embedding, norms, and
-the LM head stay replicated, so every shard computes identical logits and
-identical sampler draws — the emitted token vector needs no collective, and
-greedy/seeded streams are token-identical across tp values and to the
-single-device engine (including preemption replay).
+and the decode/prefill/copy steps run under ``shard_map`` with one
+all-reduce per psum site (attention output; MLP output or MoE combine).
+When ``tp > num_kv_heads``, KV projections and pools are *replicated*
+head-major (``kv_rep = tp / Hkv`` shards per KV head) so each shard still
+owns one whole head. MoE layers run expert-parallel: routed experts shard
+E-major (each device owns ``E / tp`` complete experts, routing replicated)
+and the combine meets in the layer's single psum. Mamba mixers stay
+replicated — collective-free. Embedding, norms, and the LM head stay
+replicated, so every shard computes identical logits and identical sampler
+draws — the emitted token vector needs no collective, and greedy/seeded
+streams are token-identical across tp values and to the single-device
+engine (including preemption replay).
 
 Token selection is the shared on-device sampler (``serving.sampling``):
 each request carries ``SamplingParams`` (temperature / top-k / top-p /
@@ -58,12 +79,13 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..models import transformer as tf
 from ..models.model import Model
+from ..models.moe import capacity_per_row
 from ..parallel import sharding as shardlib
 from .kv_cache import pages_needed
 from .sampling import sample_tokens
 from .scheduler import Request, Scheduler, SequenceState
 
-SERVABLE_FAMILIES = ("dense", "moe", "vlm")
+SERVABLE_FAMILIES = ("dense", "moe", "vlm", "ssm", "hybrid")
 
 TP_AXIS = "model"
 
@@ -98,6 +120,39 @@ def _split_fused_qkv(params, arch):
     return walk(params)
 
 
+def _replicate_kv_heads(params, arch, rep: int):
+    """Repeat every K/V projection's head blocks ``rep`` times (head-major:
+    new head j holds old head j // rep), so the column-parallel slice of a
+    ``tp > Hkv`` mesh lands each shard on one complete KV head.
+
+    The GQA math is untouched: shard i's Hq/tp query heads all group onto
+    old KV head ``i // rep``, which is exactly the replicated block the
+    shard receives — attention per shard is a smaller-head instance of the
+    single-device layer, at rep x the global KV memory (the price of
+    replication, reported by ``tp_stats``)."""
+    hd = arch.resolved_head_dim
+
+    def rep_heads(w):
+        # [..., Hkv * hd] -> [..., Hkv, hd] -> repeat -> [..., Hkv * rep * hd]
+        shape = w.shape[:-1] + (w.shape[-1] // hd, hd)
+        r = jnp.repeat(w.reshape(shape), rep, axis=-2)
+        return r.reshape(w.shape[:-1] + (w.shape[-1] * rep,))
+
+    def walk(tree):
+        if not isinstance(tree, dict):
+            return tree
+        out = {}
+        for key, val in tree.items():
+            if key == "attn" and isinstance(val, dict) and "wk" in val:
+                val = dict(val)
+                for name in ("wk", "wv", "bk", "bv"):
+                    if name in val:
+                        val[name] = rep_heads(val[name])
+            out[key] = walk(val)
+        return out
+    return walk(params)
+
+
 class ContinuousEngine:
     def __init__(self, model: Model, params, *, num_slots: int = 8,
                  num_pages: int = 256, page_size: int = 16,
@@ -106,12 +161,19 @@ class ContinuousEngine:
                  mesh=None):
         arch = model.arch
         assert arch.family in SERVABLE_FAMILIES, \
-            f"continuous engine serves attention-only LMs, not {arch.family}"
-        assert not arch.bidirectional and arch.num_heads > 0
-        assert arch.pos_emb in ("rope", "mrope"), \
-            "paged decode re-derives positions from seq_lens (rope/mrope only)"
-        assert arch.window == 0, \
-            "paged decode-attention has no sliding-window masking yet"
+            (f"continuous engine serves families {SERVABLE_FAMILIES}; "
+             f"{arch.name} is {arch.family!r}")
+        assert not arch.bidirectional, "encoder-only archs have no decode step"
+        kinds = tf.layer_kinds(arch)
+        self.has_attn = any(m == "attn" for m, _ in kinds)
+        self.has_ssm = any(m == "mamba" for m, _ in kinds)
+        if self.has_attn:
+            assert arch.num_heads > 0
+            assert arch.pos_emb in ("rope", "mrope", "none"), \
+                "paged decode re-derives positions from seq_lens " \
+                "(rope/mrope/none only)"
+            assert arch.window == 0, \
+                "paged decode-attention has no sliding-window masking yet"
         self.model = model
         self.arch = arch
         self.page_size = page_size
@@ -122,23 +184,53 @@ class ContinuousEngine:
         assert prefill_chunk % page_size == 0 and prefill_chunk > 0, \
             "prefill chunk must be a positive page multiple"
         self.prefill_chunk = prefill_chunk
+        # prefix caching shares *pages*; a mamba mixer's recurrent state is
+        # not page-decomposable (a cached KV page is useless without the SSM
+        # state at its boundary), so SSM-bearing archs gate it off — loudly:
+        # the reason lands on the engine AND in every request's result
+        self.prefix_cache_off_reason: Optional[str] = None
+        if self.has_ssm and prefix_cache:
+            self.prefix_cache_off_reason = (
+                "prefix cache unsupported for SSM-bearing archs "
+                f"({arch.name}): recurrent state is not page-decomposable")
+            prefix_cache = False
         self.scheduler = Scheduler(num_slots=num_slots, num_pages=num_pages,
                                    page_size=page_size,
                                    max_pages_per_seq=self.max_pages_per_seq,
                                    prefix_cache=prefix_cache)
-        self.pools = tf.init_paged_caches(arch, num_pages, page_size,
-                                          jnp.dtype(arch.dtype))
+        self.pools = tf.init_serving_state(arch, num_pages, page_size,
+                                           num_slots, jnp.dtype(arch.dtype))
 
         # ---- tensor parallelism over a 1-D ("model",) mesh -------------------
         assert tp >= 1, tp
         self.tp = tp
+        self.kv_rep = 1
+        # psums per period: one per attention output, one per MLP/MoE tail
+        # (mamba mixers are replicated — collective-free)
+        self._psums_per_step = sum(
+            (1 if mixer == "attn" else 0) + (0 if arch.family == "ssm" else 1)
+            for mixer, _ in kinds) * (arch.num_layers // len(kinds))
         if tp > 1:
-            assert arch.moe is None, \
-                "TP serving covers dense attention LMs (no MoE shards yet)"
-            assert arch.num_heads % tp == 0 and arch.num_kv_heads % tp == 0, \
-                (f"tp={tp} must divide query heads ({arch.num_heads}) and "
-                 f"KV heads ({arch.num_kv_heads}) — head-sharded layout")
-            assert arch.d_ff % tp == 0, (arch.d_ff, tp)
+            if arch.moe is not None:
+                assert arch.moe.num_experts % tp == 0, \
+                    (f"tp={tp} must divide the expert count "
+                     f"({arch.moe.num_experts}) — expert-parallel layout")
+                if arch.moe.num_shared_experts:
+                    shared_ff = (arch.moe.expert_ff or arch.d_ff) \
+                        * arch.moe.num_shared_experts
+                    assert shared_ff % tp == 0, (shared_ff, tp)
+            if self.has_attn:
+                assert arch.num_heads % tp == 0, \
+                    (f"tp={tp} must divide query heads ({arch.num_heads}) — "
+                     "head-sharded layout")
+                hkv = arch.num_kv_heads
+                assert hkv % tp == 0 or tp % hkv == 0, \
+                    (f"tp={tp} must divide the KV heads ({hkv}) or be a "
+                     "multiple of them (KV-head replication)")
+                if hkv % tp:
+                    self.kv_rep = tp // hkv
+            if arch.d_ff:
+                assert arch.d_ff % tp == 0, (arch.d_ff, tp)
             if mesh is None:
                 from ..launch.mesh import make_tp_mesh
                 mesh = make_tp_mesh(tp)
@@ -147,6 +239,14 @@ class ContinuousEngine:
             self.tp_axis: Optional[str] = TP_AXIS
             # fused qkv cannot be head-sharded; split (exact) then shard
             params = _split_fused_qkv(params, arch)
+            if self.kv_rep > 1:
+                # tp > Hkv: replicate each KV head across tp/Hkv shards so
+                # the head-major column slice stays one whole head per shard
+                params = _replicate_kv_heads(params, arch, self.kv_rep)
+                self.pools = jax.tree_util.tree_map_with_path(
+                    lambda kp, l: jnp.repeat(l, self.kv_rep, axis=-2)
+                    if str(kp[-1].key) in shardlib.PAGED_STATE_LEAVES else l,
+                    self.pools)
             self._param_specs = shardlib.serving_param_pspecs(params)
             self._pool_specs = shardlib.paged_pool_pspecs(self.pools)
             params = jax.device_put(params, jax.tree.map(
@@ -212,7 +312,7 @@ class ContinuousEngine:
             impl = functools.partial(self._prefill_impl, final=final,
                                      sampled=sampled, filtered=filtered)
             in_specs = (self._param_specs, self._pool_specs, P(None, None),
-                        P(None), P(), P(), P(), P(), P(), P())
+                        P(None), P(), P(), P(), P(), P(), P(), P(), P())
             self._jit_cache[key] = self._build(
                 impl, in_specs, (P(), self._pool_specs), donate=(1,))
         return self._jit_cache[key]
@@ -227,14 +327,15 @@ class ContinuousEngine:
         return self._jit_cache[key]
 
     def _tp_collective_bytes(self, positions: int) -> int:
-        """Analytic per-device wire bytes for one step's collectives: two
-        fp32 [positions, d_model] ring all-reduces per layer, each moving
-        2 * (tp-1)/tp of its payload per device."""
+        """Analytic per-device wire bytes for one step's collectives: one
+        fp32 [positions, d_model] ring all-reduce per psum (attention
+        output, MLP output / MoE combine — mamba mixers are replicated and
+        contribute none), each moving 2 * (tp-1)/tp of its payload per
+        device."""
         if self.tp <= 1:
             return 0
         payload = positions * self.arch.d_model * 4
-        per_layer = 2 * payload * 2 * (self.tp - 1) // self.tp
-        return self.arch.num_layers * per_layer
+        return self._psums_per_step * payload * 2 * (self.tp - 1) // self.tp
 
     # ------------------------------------------------------------- jitted fns ---
     def _decode_impl(self, params, pools, page_table, seq_lens, tokens,
@@ -260,21 +361,25 @@ class ContinuousEngine:
         return sample_tokens(logits, seeds, positions, temps, top_ks,
                              top_ps, filtered=filtered), pools
 
-    def _prefill_impl(self, params, pools, tokens, page_row, start, total,
-                      seed, temp, top_k, top_p, *, final, sampled, filtered):
+    def _prefill_impl(self, params, pools, tokens, page_row, slot, start,
+                      total, moe_cap, seed, temp, top_k, top_p, *, final,
+                      sampled, filtered):
         """One prompt chunk of one sequence. tokens [1, C] (padded past
         ``total - start`` valid tokens) -> (token after the chunk's last
         valid token [scalar], new pools). One compiled shape (variants on
         the static flags only: non-final chunks exist to fill pages and skip
         the LM head entirely; a final chunk pays the head plus either a raw
-        argmax or the sampler, like ``_decode_impl``). The emitted token's
-        stream position is ``total``, so its sampling key matches the decode
-        step that would have produced it in an uninterrupted run — the
-        forced-replay invariant."""
+        argmax or the sampler, like ``_decode_impl``). ``slot`` addresses
+        the sequence's per-slot SSM state rows, ``moe_cap`` is the full
+        context's MoE capacity (host-computed with the static engine's exact
+        math; attention-only / MoE-free stacks ignore them). The emitted
+        token's stream position is ``total``, so its sampling key matches
+        the decode step that would have produced it in an uninterrupted run
+        — the forced-replay invariant."""
         x = self.model._embed(params, tokens)
         x, pools = tf.paged_prefill_stack(self.arch, params["blocks"], pools,
-                                          x, page_row, start, total,
-                                          tp_axis=self.tp_axis)
+                                          x, page_row, start, total, slot,
+                                          moe_cap, tp_axis=self.tp_axis)
         if not final:
             return jnp.zeros((), jnp.int32), pools
         xl = tf.chunk_final_hidden(x, start, total)
@@ -286,12 +391,17 @@ class ContinuousEngine:
         return tok[0], pools
 
     def _copy_page_impl(self, pools, src, dst):
-        """Copy-on-write: duplicate one physical page across every layer."""
-        def leaf(pool):
+        """Copy-on-write: duplicate one physical page across every attention
+        layer. Mamba slot-state leaves have no pages — CoW only exists under
+        prefix caching, which SSM-bearing archs gate off, but the leaf map
+        stays name-aware so the step is well-defined for any stack."""
+        def leaf(key_path, pool):
+            if str(key_path[-1].key) not in shardlib.PAGED_STATE_LEAVES:
+                return pool
             if pool.ndim == 5:          # scanned stack: [nper, P, page, H, D]
                 return pool.at[:, dst].set(pool[:, src])
             return pool.at[dst].set(pool[src])
-        return jax.tree.map(leaf, pools)
+        return jax.tree_util.tree_map_with_path(leaf, pools)
 
     # --------------------------------------------------------------- prefill ----
     def _start_prefill(self, seq: SequenceState) -> None:
@@ -328,9 +438,14 @@ class ContinuousEngine:
             # them False otherwise so non-final chunks share one variant
             prefill = self._prefill_fn(final, final and not sp.greedy,
                                        final and not sp.greedy and sp.filtered)
+            # full-context MoE capacity, computed host-side with the exact
+            # math the static engine's dispatch uses (capacity_per_row)
+            moe_cap = capacity_per_row(seq.prefill_target, self.arch.moe) \
+                if self.arch.moe is not None else 0
             tok, self.pools = prefill(
                 self.params, self.pools, jnp.asarray(chunk), page_row,
-                jnp.int32(start), jnp.int32(end),
+                jnp.int32(seq.slot), jnp.int32(start), jnp.int32(end),
+                jnp.int32(moe_cap),
                 jnp.uint32(sp.seed), jnp.float32(sp.temperature),
                 jnp.int32(sp.top_k), jnp.float32(sp.top_p))
             seq.prefilled = end
@@ -373,7 +488,14 @@ class ContinuousEngine:
                 "tokens": list(seq.generated),
                 "token_times": list(seq.token_times),
                 "prompt_len": len(seq.request.prompt),
+                # per-request prefix accounting: how many prompt tokens this
+                # request got from cached pages — 0 with a reason when the
+                # engine gated the cache off (never a silent no-op)
+                "cached_prefill_tokens": seq.cached_len,
             }
+            if self.prefix_cache_off_reason is not None:
+                results[seq.request.uid]["prefix_cache"] = \
+                    f"off: {self.prefix_cache_off_reason}"
 
         while pending or sched.has_work:
             while pending and pending[0].arrival <= now():
@@ -512,19 +634,38 @@ class ContinuousEngine:
 
         Page ids are global under head sharding, so every device holds (a
         1/tp-heads slice of) every in-use page: per-device *pages* equal the
-        global count while per-device *bytes* divide by tp.
-        ``collective_bytes`` is the analytic per-device ring all-reduce wire
-        traffic of the two per-layer psums (attention out, MLP out).
+        global count while per-device *bytes* divide by tp — times ``kv_rep``
+        when tp > Hkv forces KV-head replication. Only attention layers hold
+        pages; mamba layers instead carry the (replicated) per-slot SSM
+        state, reported as ``ssm_state_bytes``. ``collective_bytes`` is the
+        analytic per-device ring all-reduce wire traffic of the per-layer
+        psums (attention out, MLP out / MoE combine).
         """
         arch = self.arch
+        kinds = tf.layer_kinds(arch)
+        nper = arch.num_layers // len(kinds)
+        n_attn = sum(m == "attn" for m, _ in kinds) * nper
+        n_mamba = len(kinds) * nper - n_attn
         page_bytes = (self.page_size * arch.num_kv_heads
                       * arch.resolved_head_dim
-                      * 2 * arch.num_layers * jnp.dtype(arch.dtype).itemsize)
+                      * 2 * n_attn * jnp.dtype(arch.dtype).itemsize)
+        ssm_bytes = 0
+        if n_mamba:
+            from ..models import ssm as ssm_lib
+            s = arch.ssm
+            h = ssm_lib.num_ssm_heads(arch)
+            ssm_bytes = n_mamba * self.num_slots * (
+                h * s.state_dim * s.head_dim * 4          # fp32 SSD state
+                + (s.conv_width - 1) * ssm_lib.conv_channels(arch)
+                * jnp.dtype(arch.dtype).itemsize)         # conv tail
         return {
             "tp": self.tp,
+            "kv_head_replication": self.kv_rep,
             "collective_bytes_per_device": self.collective_bytes,
             "per_device": {
                 "pages_in_use": self.pages_in_use,
-                "kv_bytes": self.pages_in_use * page_bytes // self.tp,
+                "kv_bytes": self.pages_in_use * page_bytes * self.kv_rep
+                // self.tp,
+                "ssm_state_bytes": ssm_bytes,             # replicated
             },
         }

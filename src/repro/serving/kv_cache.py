@@ -1,8 +1,11 @@
 """Paged KV cache bookkeeping (host side).
 
-The device side is a pytree of per-layer page pools built by
-``repro.models.transformer.init_paged_caches`` — [P, page_size, Hkv, Dh]
-arrays whose first axis is indexed by *physical page id*. This module owns
+The device side is the per-layer decode-state pytree built by
+``repro.models.transformer.init_serving_state``: attention layers carry
+[P, page_size, Hkv, Dh] page pools whose first axis is indexed by *physical
+page id* (this module's domain); mamba layers carry constant-size per-slot
+state that needs no page bookkeeping at all — a slot's state row is reset
+on reuse and recomputed by forced-replay preemption. This module owns
 everything about which pages belong to whom:
 
 - ``PageAllocator``  : reference-counted free-list over physical ids 1..P-1

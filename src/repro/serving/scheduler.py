@@ -30,7 +30,13 @@ growth      crossing a page boundary mid-decode allocates one page. If the
             token's (seed, position) PRNG key is the one the uninterrupted
             run would have used, so the continuation is token-identical
             under any sampling setting; the re-prefill typically prefix-hits
-            the sequence's own surviving cached pages).
+            the sequence's own surviving cached pages). Forced replay is
+            also what makes preemption layer-kind-agnostic: a mamba mixer's
+            per-slot recurrent state is never checkpointed — replaying the
+            context recomputes it exactly, so the scheduler needs no
+            per-kind state bookkeeping (engines serving SSM-bearing archs
+            simply run with ``prefix_cache=False``; pages remain the
+            admission/growth currency either way).
 recycling   EOS / max-new-tokens frees the slot and its pages in O(1); the
             next queued request takes the slot without touching the compiled
             decode step (fixed batch, inactive slots masked by seq_len 0).

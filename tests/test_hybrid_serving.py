@@ -1,0 +1,404 @@
+"""Decode-state protocol: the continuous engine serving SSM (mamba2-1.3b),
+hybrid (jamba-v0.1-52b), and MoE (deepseek-moe-16b) smoke archs.
+
+What must hold, per the protocol's contract:
+
+- **Cross-engine parity.** Greedy and seeded-sampled streams are
+  token-identical between the static engine and the continuous engine for
+  all three families, including slot recycling and forced-replay preemption
+  (an SSM mixer's state is recomputed by re-prefilling the victim's context,
+  so resume is token-identical even though the state is not page-shaped).
+- **Cross-tp parity.** tp ∈ {1, 2} streams are identical for the hybrid and
+  expert-parallel MoE paths (subprocess with 4 forced host devices, the
+  ``test_tp_serving.py`` pattern), including preemption mid-decode, and
+  tp=4 on the 2-KV-head llama smoke config exercises KV-head replication.
+- **Prefix-cache gate.** SSM-bearing archs gate prefix caching off with an
+  engine-level reason and a per-request result stat — never a silent no-op —
+  and ``launch.serve`` rejects an explicit ``--prefix-cache`` up front.
+
+MoE parity notes: capacity drops are batch-shape-dependent (chunked prefill
+re-buckets capacity per chunk, and chunk padding routes too), so the parity
+fixtures raise ``capacity_factor`` until no token drops — the same choice
+``test_serve_consistency.py`` pins. Parity runs in fp32, like every other
+cross-engine fixture: bf16 reassociation flips near-tied draws of
+random-init smoke models.
+"""
+import dataclasses
+import functools
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import smoke_config
+from repro.models import build_model
+from repro.parallel import sharding as sh
+from repro.serving import ContinuousEngine, Request, sample_tokens
+from repro.serving.sampling import SamplingParams
+
+ROOT = Path(__file__).resolve().parents[1]
+
+FAMILIES = ["mamba2-1.3b", "jamba-v0.1-52b", "deepseek-moe-16b"]
+
+
+@functools.lru_cache(maxsize=None)
+def _fp32_model(name):
+    arch = smoke_config(name)
+    arch = dataclasses.replace(arch, dtype="float32", param_dtype="float32")
+    if arch.moe is not None:
+        arch = dataclasses.replace(
+            arch, moe=dataclasses.replace(arch.moe, capacity_factor=8.0))
+    model = build_model(arch)
+    params = model.init(jax.random.key(0))
+    return arch, model, params
+
+
+def _static_sampled(model, params, prompts, gens, sps):
+    """Per-request static decode (batch 1) through the shared sampler: the
+    reference stream the continuous engine must reproduce draw for draw."""
+    prefill = jax.jit(model.prefill)
+    decode = jax.jit(model.decode_step)
+    sample = jax.jit(sample_tokens)
+
+    def draw(logits, sp, pos):
+        return int(sample(logits,
+                          jnp.asarray([sp.seed], jnp.uint32),
+                          jnp.asarray([pos], jnp.int32),
+                          jnp.asarray([sp.temperature], jnp.float32),
+                          jnp.asarray([sp.top_k], jnp.int32),
+                          jnp.asarray([sp.top_p], jnp.float32))[0])
+
+    out = []
+    for prompt, glen, sp in zip(prompts, gens, sps):
+        plen = len(prompt)
+        caches = model.init_caches(None, 1, plen + glen)
+        logits, caches = prefill(params, caches,
+                                 {"tokens": jnp.asarray([prompt])})
+        tok = draw(logits[:, -1], sp, plen)
+        ids = [tok]
+        for s in range(glen - 1):
+            logits, caches = decode(
+                params, caches,
+                {"tokens": jnp.asarray([[tok]]),
+                 "positions": jnp.full((1,), plen + s, jnp.int32)})
+            tok = draw(logits[:, -1], sp, plen + 1 + s)
+            ids.append(tok)
+        out.append(ids)
+    return out
+
+
+# -------------------------------------------------------- cross-engine parity ---
+
+@pytest.mark.parametrize("name", FAMILIES)
+def test_continuous_matches_static_greedy(name):
+    arch, model, params = _fp32_model(name)
+    rng = np.random.default_rng(3)
+    prompts = [list(map(int, rng.integers(5, arch.vocab_size,
+                                          rng.integers(6, 14))))
+               for _ in range(4)]
+    gens = [6, 11, 4, 9]
+    ref = _static_sampled(model, params, prompts, gens,
+                          [SamplingParams()] * 4)
+    engine = ContinuousEngine(model, params, num_slots=4, num_pages=48,
+                              page_size=8, max_seq_len=64)
+    res = engine.run([Request(uid=i, prompt=prompts[i], max_new_tokens=gens[i])
+                      for i in range(4)])
+    for i in range(4):
+        assert res[i]["tokens"] == ref[i], f"request {i} diverged"
+    assert engine.live_kv_tokens == 0          # all pages recycled
+
+
+@pytest.mark.parametrize("name", FAMILIES)
+def test_sampled_parity_under_recycling_and_preemption(name):
+    """A pool too small for every request: slot recycling and forced-replay
+    preemption (which for SSM mixers recomputes the recurrent state by
+    re-prefilling) must not change one sampled token vs the static
+    reference."""
+    arch, model, params = _fp32_model(name)
+    rng = np.random.default_rng(37)
+    prompts = [list(map(int, rng.integers(5, arch.vocab_size, 12)))
+               for _ in range(5)]
+    gens = [4, 16, 7, 12, 9]
+    sps = [SamplingParams(temperature=0.8, top_k=0 if i % 2 else 20,
+                          top_p=0.95, seed=1000 + i) for i in range(5)]
+    ref = _static_sampled(model, params, prompts, gens, sps)
+    engine = ContinuousEngine(model, params, num_slots=2, num_pages=10,
+                              page_size=4, max_seq_len=32,
+                              prefix_cache=False)
+    res = engine.run([Request(uid=i, prompt=prompts[i], max_new_tokens=gens[i],
+                              sampling=sps[i]) for i in range(5)])
+    for i in range(5):
+        assert res[i]["tokens"] == ref[i], f"request {i} diverged"
+    assert engine.prefills > 5                 # preemption actually happened
+    assert engine.scheduler.allocator.used_count == 0
+
+
+# ---------------------------------------------------------- prefix-cache gate ---
+
+def test_prefix_cache_gated_off_for_ssm_with_stat():
+    """Asking an SSM-bearing engine for prefix caching must gate it off with
+    an engine-level reason AND a per-request result stat — the explicit
+    "this was not a silent no-op" contract."""
+    arch, model, params = _fp32_model("mamba2-1.3b")
+    engine = ContinuousEngine(model, params, num_slots=2, num_pages=32,
+                              page_size=8, max_seq_len=64, prefix_cache=True)
+    assert engine.scheduler.prefix is None
+    assert "page-decomposable" in engine.prefix_cache_off_reason
+    prompt = list(range(5, 17))
+    res = engine.run([Request(uid=0, prompt=prompt, max_new_tokens=4),
+                      Request(uid=1, prompt=prompt, max_new_tokens=4)])
+    for uid in (0, 1):
+        assert res[uid]["cached_prefill_tokens"] == 0
+        assert res[uid]["prefix_cache"].startswith("off: ")
+    # explicitly asking for OFF is the caller's choice, not a gate
+    quiet = ContinuousEngine(model, params, num_slots=2, num_pages=32,
+                             page_size=8, max_seq_len=64, prefix_cache=False)
+    assert quiet.prefix_cache_off_reason is None
+
+
+def test_attention_archs_keep_per_request_cache_stat():
+    """The per-request ``cached_prefill_tokens`` stat is universal: on an
+    attention arch with the cache ON, a repeated prompt's second request
+    reports its cached tokens and carries no gate marker."""
+    arch, model, params = _fp32_model("deepseek-moe-16b")
+    prompt = list(range(5, 5 + 16))
+    engine = ContinuousEngine(model, params, num_slots=2, num_pages=32,
+                              page_size=8, max_seq_len=64, prefix_cache=True)
+    res = engine.run([Request(uid=0, prompt=prompt, max_new_tokens=3),
+                      Request(uid=1, prompt=prompt, max_new_tokens=3)])
+    assert res[0]["tokens"] == res[1]["tokens"]
+    assert "prefix_cache" not in res[0]
+    assert res[1]["cached_prefill_tokens"] > 0
+
+
+def test_serve_cli_rejects_prefix_cache_for_ssm(capsys):
+    from repro.launch import serve
+    for name in ("mamba2-1.3b", "jamba-v0.1-52b"):
+        with pytest.raises(SystemExit):
+            serve.main(["--arch", name, "--smoke", "--engine", "continuous",
+                        "--prefix-cache"])
+        err = capsys.readouterr().err
+        assert "not page-decomposable" in err
+    # the static engine has no prefix cache: the flag must stay accepted
+    # there (it was before this gate existed) and simply do nothing
+    out = serve.main(["--arch", "mamba2-1.3b", "--smoke", "--engine",
+                      "static", "--prefix-cache", "--batch", "1",
+                      "--prompt-len", "8", "--gen-len", "2"])
+    assert out["tokens"].shape == (1, 2)
+    # with NO flag, the continuous CLI must route through the ENGINE's gate
+    # so the off-reason is recorded, not silently pre-resolved to off here
+    out = serve.main(["--arch", "mamba2-1.3b", "--smoke", "--engine",
+                      "continuous", "--batch", "1",
+                      "--prompt-len", "8", "--gen-len", "2"])
+    assert "not page-decomposable" in out["prefix_cache_off_reason"]
+
+
+def test_serve_cli_names_servable_families(capsys):
+    """An unservable family must fail up front with a message naming
+    SERVABLE_FAMILIES, not as an assertion deep in the engine."""
+    from repro.launch import serve
+    from repro.serving.engine import SERVABLE_FAMILIES
+    with pytest.raises(SystemExit):
+        serve.main(["--arch", "whisper-base", "--smoke",
+                    "--engine", "continuous"])
+    err = capsys.readouterr().err
+    for fam in SERVABLE_FAMILIES:
+        assert fam in err
+    assert "static" in err
+
+
+# ------------------------------------------------------------- sharding specs ---
+
+def test_serving_state_specs_mixed_stack():
+    """Decode-state pspecs: attention page pools head-sharded on ndim-2,
+    mamba slot-state (conv tail + SSD state) replicated."""
+    from repro.models import transformer as tf
+
+    arch = smoke_config("jamba-v0.1-52b")
+    pools = jax.eval_shape(
+        lambda: tf.init_serving_state(arch, 8, 4, 2, jnp.float32))
+    specs = sh.paged_pool_pspecs(pools)
+    flat = jax.tree_util.tree_leaves_with_path(
+        specs, is_leaf=lambda s: isinstance(s, P))
+    names = set()
+    for kp, spec in flat:
+        name = kp[-1].key
+        names.add(name)
+        if name in ("k", "v"):
+            assert spec[-2] == "model", (name, spec)
+            assert all(a is None for i, a in enumerate(spec)
+                       if i != len(spec) - 2)
+        else:
+            assert name in ("conv", "state")
+            assert all(a is None for a in spec), (name, spec)
+    assert {"k", "v", "conv", "state"} <= names
+
+
+def test_serving_param_pspecs_expert_parallel_layout():
+    """Routed experts shard E-major; the router and mamba mixers stay
+    replicated; shared experts take the dense column/row-parallel rules."""
+    from repro.serving.engine import _split_fused_qkv
+
+    for name in ("deepseek-moe-16b", "jamba-v0.1-52b"):
+        arch = smoke_config(name)
+        model = build_model(arch)
+        params = jax.eval_shape(lambda m=model, a=arch: _split_fused_qkv(
+            m.init(jax.random.key(0)), a))
+        specs = sh.serving_param_pspecs(params)
+        seen = {}
+        for kp, spec in jax.tree_util.tree_leaves_with_path(
+                specs, is_leaf=lambda s: isinstance(s, P)):
+            path = tuple(k.key for k in kp if hasattr(k, "key"))
+            if "experts" in path[:-1]:
+                assert spec[-3] == "model" and spec[-2] is None \
+                    and spec[-1] is None, (path, spec)
+            elif "shared" in path[:-1]:
+                if path[-1] in ("w1", "w3"):
+                    assert spec[-1] == "model", (path, spec)
+                elif path[-1] == "w2":
+                    assert spec[-2] == "model", (path, spec)
+            seen.setdefault(path[-1], spec)
+        assert all(a is None for a in seen["router"])
+        if "in_proj" in seen:                  # jamba's mamba mixers
+            for mamba_leaf in ("in_proj", "out_proj", "conv", "A_log"):
+                assert all(a is None for a in seen[mamba_leaf]), mamba_leaf
+
+
+# ------------------------------------------------------------ tp ∈ {1, 2, 4} ----
+
+def _run_subprocess(body: str):
+    script = (
+        "import os\n"
+        "os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=4'\n"
+        "os.environ['JAX_PLATFORMS'] = 'cpu'\n" + body)
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, cwd=ROOT, timeout=540,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "HOME": "/root"})
+    assert r.returncode == 0, (r.stdout[-1500:], r.stderr[-3000:])
+    return r.stdout
+
+
+def test_tp_parity_hybrid_moe_and_kv_replication():
+    """One subprocess covers the tp acceptance matrix: jamba (hybrid) and
+    mamba2 (pure SSM) token-identical across tp ∈ {1, 2}; expert-parallel
+    deepseek-moe identical across tp ∈ {1, 2} under a starved pool forcing
+    preemption mid-decode; llama's 2-KV-head smoke config at tp=4
+    exercising KV-head replication. Collective accounting must be positive
+    exactly where psums exist — and zero for the pure-SSM stack, whose
+    mixers are replicated."""
+    out = _run_subprocess(r"""
+import dataclasses
+import jax, numpy as np
+from repro.configs import smoke_config
+from repro.models import build_model
+from repro.serving import ContinuousEngine, Request
+from repro.serving.sampling import SamplingParams
+
+def fp32(name):
+    arch = smoke_config(name)
+    arch = dataclasses.replace(arch, dtype="float32", param_dtype="float32")
+    if arch.moe is not None:
+        arch = dataclasses.replace(
+            arch, moe=dataclasses.replace(arch.moe, capacity_factor=8.0))
+    model = build_model(arch)
+    return arch, model, model.init(jax.random.key(0))
+
+def reqs_for(arch, seed, n=4, plen=(4, 14), gens=None):
+    rng = np.random.default_rng(seed)
+    prompts = [list(map(int, rng.integers(5, arch.vocab_size,
+                                          int(rng.integers(*plen)))))
+               for _ in range(n)]
+    gens = gens or [int(rng.integers(3, 9)) for _ in range(n)]
+    sps = [SamplingParams() if i % 2 == 0 else
+           SamplingParams(temperature=0.8, top_k=12, top_p=0.9, seed=100 + i)
+           for i in range(n)]
+    return [Request(uid=i, prompt=prompts[i], max_new_tokens=gens[i],
+                    sampling=sps[i]) for i in range(n)]
+
+def serve(model, params, reqs, **kw):
+    eng = ContinuousEngine(model, params, **kw)
+    res = eng.run(list(reqs))
+    return eng, [res[i]["tokens"] for i in range(len(reqs))]
+
+# hybrid (jamba): mixed greedy/sampled, tp=1 vs tp=2, roomy then starved pool
+arch, model, params = fp32("jamba-v0.1-52b")
+reqs = reqs_for(arch, 7)
+kw = dict(num_slots=4, num_pages=64, page_size=8, max_seq_len=64)
+e1, r1 = serve(model, params, reqs, tp=1, **kw)
+e2, r2 = serve(model, params, reqs, tp=2, **kw)
+assert r1 == r2, (r1, r2)
+assert e1.collective_bytes == 0 and e2.collective_bytes > 0
+assert e2.tp_stats()["per_device"]["ssm_state_bytes"] > 0
+starved = reqs_for(arch, 37, n=5, plen=(12, 13), gens=[4, 16, 7, 12, 9])
+skw = dict(num_slots=2, num_pages=10, page_size=4, max_seq_len=40)
+p1, s1 = serve(model, params, starved, tp=1, **skw)
+p2, s2 = serve(model, params, starved, tp=2, **skw)
+assert s1 == s2, (s1, s2)
+assert p2.prefills > 5, "pool was not starved enough to preempt"
+
+# pure SSM (mamba2): tp is all-replicated execution — parity, zero psums
+arch, model, params = fp32("mamba2-1.3b")
+reqs = reqs_for(arch, 11)
+e1, r1 = serve(model, params, reqs, tp=1, **kw)
+e2, r2 = serve(model, params, reqs, tp=2, **kw)
+assert r1 == r2, (r1, r2)
+assert e2.collective_bytes == 0, "replicated mamba stack psums nothing"
+
+# expert-parallel MoE (deepseek): starved pool -> preemption mid-decode
+arch, model, params = fp32("deepseek-moe-16b")
+reqs = reqs_for(arch, 13, n=5, plen=(12, 13), gens=[4, 16, 7, 12, 9])
+m1, t1 = serve(model, params, reqs, tp=1, prefix_cache=False, **skw)
+m2, t2 = serve(model, params, reqs, tp=2, prefix_cache=False, **skw)
+assert t1 == t2, (t1, t2)
+assert m2.prefills > 5, "pool was not starved enough to preempt"
+assert m2.collective_bytes > 0
+
+# KV-head replication: llama smoke has 2 KV heads; tp=4 replicates each
+# across 2 shards and must stay token-identical to tp=1
+arch, model, params = fp32("llama3.2-3b")
+assert arch.num_kv_heads == 2, arch.num_kv_heads
+reqs = reqs_for(arch, 17)
+l1, a1 = serve(model, params, reqs, tp=1, **kw)
+l4, a4 = serve(model, params, reqs, tp=4, **kw)
+assert a1 == a4, (a1, a4)
+st = l4.tp_stats()
+assert st["kv_head_replication"] == 2
+# replication's honest cost: past tp == Hkv, per-device KV bytes stop
+# shrinking — tp=4 (1 of 2 heads each, replicated twice) holds exactly what
+# tp=2 (1 of 2 heads each) holds
+l2, a2 = serve(model, params, reqs, tp=2, **kw)
+assert a2 == a1
+assert st["per_device"]["kv_bytes"] == l2.tp_stats()["per_device"]["kv_bytes"]
+assert st["per_device"]["kv_bytes"] > 0
+print("PROTOCOL_TP_PARITY_OK")
+""")
+    assert "PROTOCOL_TP_PARITY_OK" in out
+
+
+def test_tp_rejects_indivisible_expert_count():
+    """Expert-parallel TP needs tp | num_experts; the error must fire at
+    construction and name the expert count."""
+    arch = smoke_config("deepseek-moe-16b")
+    arch = dataclasses.replace(
+        arch, moe=dataclasses.replace(arch.moe, num_experts=3, top_k=2))
+    model = build_model(arch)
+    params = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    with pytest.raises(AssertionError, match="expert"):
+        ContinuousEngine(model, params, tp=2)
+
+
+def test_tp_rejects_unreplicatable_kv_heads():
+    """tp must divide Hkv or be a multiple of it; tp=3 on 2 KV heads is
+    neither and must fail before any mesh is built."""
+    arch = smoke_config("llama3.2-3b")        # 4 query heads, 2 kv heads
+    arch = dataclasses.replace(arch, num_heads=6)
+    model = build_model(arch)
+    params = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    with pytest.raises(AssertionError, match="KV heads"):
+        ContinuousEngine(model, params, tp=3)

@@ -66,3 +66,33 @@ def test_capacity_per_row():
     assert moe_lib.capacity_per_row(1, arch.moe) >= 1
     c = moe_lib.capacity_per_row(4096, arch.moe)
     assert c * arch.moe.num_experts >= 4096 * arch.moe.top_k
+
+
+def test_eff_capacity_reproduces_unpadded_dispatch():
+    """The chunked-prefill contract: a prompt served in one PADDED chunk
+    must drop exactly the tokens a full-(unpadded-)prompt dispatch drops.
+    Trailing padding can never displace a real token (the stable expert
+    sort keeps padded entries behind every real one), but the padded shape
+    inflates ``capacity_per_row`` — ``eff_capacity`` pins the threshold to
+    the real prompt's bucket, making real-token outputs bit-identical to
+    the unpadded run even when capacity binds."""
+    arch = _arch(cf=0.6)                       # capacity binds hard
+    p = moe_lib.init_moe(jax.random.key(0), arch, jnp.float32)
+    n_valid, s = 10, 16
+    x_pad = jax.random.normal(jax.random.key(1), (1, s, arch.d_model))
+    x_real = x_pad[:, :n_valid]
+    cap_real = moe_lib.capacity_per_row(n_valid, arch.moe)
+    y_pad, _ = moe_lib.apply_moe(arch, p, x_pad,
+                                 eff_capacity=jnp.int32(cap_real))
+    y_real, _ = moe_lib.apply_moe(arch, p, x_real)
+    assert jnp.array_equal(y_pad[:, :n_valid], y_real)
+    # negative control: without eff_capacity, the padded shape's larger
+    # bucket keeps tokens the unpadded dispatch drops — i.e. this scenario
+    # really exercises bound capacity
+    u_pad, _ = moe_lib.apply_moe(arch, p, x_pad)
+    assert not jnp.array_equal(u_pad[:, :n_valid], y_real)
+    # eff_capacity >= the shape's own bucket is an exact no-op
+    cap_shape = moe_lib.capacity_per_row(s, arch.moe)
+    y_same, _ = moe_lib.apply_moe(arch, p, x_pad,
+                                  eff_capacity=jnp.int32(cap_shape))
+    assert jnp.array_equal(y_same, u_pad)

@@ -33,6 +33,11 @@ BASELINE = {
         "on": {"tok_s": 80.0, "ttft_ms": 700.0},
     },
     "sampled": {"greedy": {"tok_s": 150.0}, "sampled": {"tok_s": 90.0}},
+    "families": {
+        "mamba2-1.3b": {"tok_s": 40.0, "prefix_cache": "off: ssm"},
+        "jamba-v0.1-52b": {"tok_s": 20.0, "prefix_cache": "off: ssm"},
+        "deepseek-moe-16b": {"tok_s": 30.0, "prefix_cache": "on"},
+    },
 }
 
 
@@ -50,8 +55,35 @@ def test_metric_inventory_matches_baseline_sections():
     assert "rates.inf.continuous.tok_s" in paths
     assert "shared_prefix.on.ttft_ms" in paths
     assert "sampled.sampled.tok_s" in paths
+    assert "families.jamba-v0.1-52b.tok_s" in paths
     # static engine numbers are context, not gated
     assert not any("static" in p for p in paths)
+
+
+def test_baseline_without_families_section_fails():
+    """`families` is a REQUIRED baseline section: a baseline that predates
+    the hybrid/SSM/MoE serving sweep would silently un-gate it — the gate
+    must demand a re-baseline instead."""
+    old = {k: v for k, v in copy.deepcopy(BASELINE).items()
+           if k != "families"}
+    rows = cb.compare(copy.deepcopy(old), old, 0.2)
+    missing = [r for r in rows if not r["ok"]]
+    assert [r["metric"] for r in missing] == ["families.<section>"]
+    assert "re-baseline" in missing[0]["note"]
+
+
+def test_families_regression_and_partial_artifact_fail():
+    cur = copy.deepcopy(BASELINE)
+    cur["families"]["mamba2-1.3b"]["tok_s"] = 40.0 * 0.5       # -50%
+    assert _failed(cb.compare(cur, BASELINE, 0.2)) == \
+        ["families.mamba2-1.3b.tok_s"]
+    cur = {k: v for k, v in copy.deepcopy(BASELINE).items()
+           if k != "families"}
+    rows = cb.compare(cur, BASELINE, 0.2)
+    assert all("MISSING" in r["note"] for r in rows if not r["ok"])
+    assert {r["metric"] for r in rows if not r["ok"]} == {
+        "families.mamba2-1.3b.tok_s", "families.jamba-v0.1-52b.tok_s",
+        "families.deepseek-moe-16b.tok_s"}
 
 
 def test_throughput_regression_beyond_tolerance_fails():

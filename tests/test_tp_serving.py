@@ -128,15 +128,6 @@ def test_tp_rejects_indivisible_head_counts():
         ContinuousEngine(model, params, tp=3)
 
 
-def test_tp_rejects_moe_archs():
-    arch = smoke_config("deepseek-moe-16b")
-    model = build_model(arch)
-    params = jax.eval_shape(lambda: model.init(jax.random.key(0)))
-    with pytest.raises(AssertionError, match="MoE"):
-        from repro.serving import ContinuousEngine
-        ContinuousEngine(model, params, tp=2)
-
-
 def test_split_fused_qkv_is_exact():
     """Splitting the fused wqkv into wq/wk/wv must not change one projection
     output bit — it is the tp > 1 engine's precondition for head sharding."""

@@ -9,11 +9,15 @@ metric:
 - ``shared_prefix.{off,on}.tok_s``
 - ``shared_prefix.{off,on}.ttft_ms``     (mean TTFT: higher is a regression)
 - ``sampled.{greedy,sampled}.tok_s``
+- ``families.<arch>.tok_s``              (hybrid/SSM/MoE serving sweep)
 
 Every metric present in the *baseline* must exist in the current result —
 a silently missing section (a partial artifact) fails the gate too. Extra
 sections in the current result (e.g. ``tensor_parallel``) are ignored, so
-the baseline does not need regenerating when new sections land.
+the baseline does not usually need regenerating when new sections land —
+EXCEPT the sections in ``REQUIRED_SECTIONS``, which the baseline itself
+must carry: a baseline that predates them silently un-gates that coverage,
+so the gate fails until it is regenerated.
 
 Usage:
     python tools/check_bench.py serving_bench.json \
@@ -44,6 +48,10 @@ from typing import Dict, Iterator, List, Optional, Tuple
 # (metric path, value, direction); direction "higher" = bigger is better
 Metric = Tuple[str, float, str]
 
+# sections the BASELINE must carry: absence means it predates the coverage
+# (and would silently un-gate it) — regenerate and commit a fresh artifact
+REQUIRED_SECTIONS = ("families",)
+
 
 def iter_metrics(baseline: dict) -> Iterator[Metric]:
     """Yield every gated metric the baseline carries."""
@@ -60,14 +68,29 @@ def iter_metrics(baseline: dict) -> Iterator[Metric]:
         d = baseline.get("sampled", {}).get(tag)
         if d:
             yield f"sampled.{tag}.tok_s", d["tok_s"], "higher"
+    for arch, d in baseline.get("families", {}).items():
+        if "tok_s" in d:
+            yield f"families.{arch}.tok_s", d["tok_s"], "higher"
 
 
 def lookup(result: dict, path: str) -> Optional[float]:
+    """Resolve a dotted metric path. Keys may themselves contain dots (arch
+    names like ``mamba2-1.3b``), so at each level the longest join of
+    remaining segments that is an actual key wins."""
     node = result
-    for key in path.split("."):
-        if not isinstance(node, dict) or key not in node:
+    parts = path.split(".")
+    i = 0
+    while i < len(parts):
+        if not isinstance(node, dict):
             return None
-        node = node[key]
+        for j in range(len(parts), i, -1):
+            key = ".".join(parts[i:j])
+            if key in node:
+                node = node[key]
+                i = j
+                break
+        else:
+            return None
     return float(node) if isinstance(node, (int, float)) else None
 
 
@@ -75,6 +98,12 @@ def compare(current: dict, baseline: dict,
             tolerance: float) -> List[Dict[str, object]]:
     """-> one row per gated metric: {metric, baseline, current, ok, note}."""
     rows: List[Dict[str, object]] = []
+    for sec in REQUIRED_SECTIONS:
+        if baseline and sec not in baseline:
+            rows.append({"metric": f"{sec}.<section>", "baseline": None,
+                         "current": None, "ok": False,
+                         "note": "REQUIRED section absent from baseline — "
+                                 "re-baseline (see docstring)"})
     for path, base, direction in iter_metrics(baseline):
         cur = lookup(current, path)
         if cur is None:
