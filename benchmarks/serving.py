@@ -66,6 +66,12 @@ from .common import emit
 
 PAGE_SIZE = 16
 
+# trace_stats() of every continuous engine the current run() built, so the
+# summary can assert the jit caches stayed closed across ALL sections —
+# a retrace anywhere in the bench shows up as nonzero ``recompiles.excess``
+# and tools/check_bench.py gates on it
+_ENGINE_STATS: list = []
+
 
 class EngineError(RuntimeError):
     """A serving run produced error results the trace did not ask for."""
@@ -138,6 +144,8 @@ def run_static(model, params, requests, batch_size):
                   "positions": jnp.full((b,), plen + step, jnp.int32)}
             logits, caches = decode(params, caches, db)
             toks = jnp.argmax(logits[:, -1], axis=-1)
+            # jaxlint: allow[hot-host-sync] intentional: per-token latency
+            # timestamps are the point of this benchmark loop
             toks.block_until_ready()
             now = time.perf_counter() - t0
             for i, r in enumerate(group):
@@ -168,6 +176,7 @@ def run_continuous(model, params, requests, slots, *, prefix_cache=False,
     if errors:
         raise EngineError(f"engine returned error results: {errors}")
     times = {uid: r["token_times"] for uid, r in results.items()}
+    _ENGINE_STATS.append(engine.trace_stats())
     return times, results, wall, engine
 
 
@@ -372,6 +381,7 @@ def run(arch_name="llama3.2-3b", n_requests=16, slots=4,
 
     results = {"arch": arch_name, "n_requests": n_requests, "slots": slots,
                "backend": jax.default_backend(), "rates": {}}
+    _ENGINE_STATS.clear()
     if not tp_only:
         run_rates(model, params, n_requests, slots, rates, results)
         run_shared_prefix(model, params, n_requests, slots, results)
@@ -379,6 +389,19 @@ def run(arch_name="llama3.2-3b", n_requests=16, slots=4,
         run_families(n_requests, slots, results)
     if tp > 1:
         run_tp(model, params, n_requests, slots, tp, results)
+    # jit-cache closure census across every engine the run built: ``excess``
+    # counts traces beyond one-per-variant (i.e. recompiles after warmup)
+    # and must be 0 — check_bench gates on it with direction "zero"
+    results["recompiles"] = {
+        "engines": len(_ENGINE_STATS),
+        "variants": sum(s["variants"] for s in _ENGINE_STATS),
+        "traces": sum(s["traces"] for s in _ENGINE_STATS),
+        "excess": sum(s["excess"] for s in _ENGINE_STATS),
+    }
+    rc = results["recompiles"]
+    print(f"[serving] recompiles: {rc['engines']} engine(s), "
+          f"{rc['variants']} jit variant(s), {rc['traces']} trace(s) — "
+          f"{rc['excess']} recompile(s) after warmup")
     if json_path:
         with open(json_path, "w") as f:
             json.dump(results, f, indent=2)

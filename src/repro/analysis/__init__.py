@@ -1,0 +1,43 @@
+"""repro.analysis — correctness tooling for the serving stack.
+
+Three instruments, one package:
+
+- ``lint``      static AST pass (jaxlint): host syncs in jitted/hot paths,
+                tracer branching, PRNG key reuse, Pallas grid/masking/dtype
+                rules. Stdlib-only — ``tools/jaxlint.py`` loads it by file
+                path so CI lints without a jax install.
+- ``sanitize``  opt-in runtime invariant checks for ``ContinuousEngine``
+                (``sanitize=True`` / ``REPRO_SANITIZE=1``): page-refcount
+                conservation + leak freedom, slot/active-mask consistency,
+                PrefixIndex holds-map agreement, NaN/Inf probes on logits
+                at chunk boundaries.
+- ``recompile`` static recompilation auditor: abstract-evals every servable
+                family x engine variant x tp with ``jax.eval_shape`` (no
+                device execution) and asserts the jit cache signature set is
+                closed — steps 2..N add zero new traces.
+
+Imports are lazy so ``lint`` stays importable (and fast) in contexts with
+no jax — the attribute you touch decides what loads.
+"""
+import importlib
+
+_SUBMODULES = ("lint", "sanitize", "recompile")
+_LAZY = {
+    "RULES": "lint", "Finding": "lint",
+    "lint_source": "lint", "lint_paths": "lint",
+    "SanitizerError": "sanitize", "check_engine": "sanitize",
+    "sanitize_enabled": "sanitize",
+    "AuditError": "recompile", "AuditReport": "recompile",
+    "audit_family": "recompile", "audit_all": "recompile",
+}
+
+__all__ = list(_SUBMODULES) + list(_LAZY)
+
+
+def __getattr__(name):
+    if name in _SUBMODULES:
+        return importlib.import_module(f".{name}", __name__)
+    if name in _LAZY:
+        mod = importlib.import_module(f".{_LAZY[name]}", __name__)
+        return getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,916 @@
+"""jaxlint: a JAX/Pallas-aware static-analysis pass (AST-based, stdlib-only).
+
+The source paper's finding — once GEMMs are tuned, BERT-class inference is
+dominated by memory-intensive and *host-side* overheads — makes a class of
+silent defect expensive in exactly this repo: a stray ``.item()`` in a decode
+loop serializes async dispatch, a Python branch on a tracer retraces per
+value, a reused PRNG key correlates "independent" draws, and a Pallas grid
+built with plain ``//`` drops the partial tail block. None of these fail a
+unit test; all of them show up as tok/s or as silently wrong numerics. This
+module catches them at review time, before they land.
+
+It is deliberately **stdlib-only** (``ast`` + ``re``): ``tools/jaxlint.py``
+loads it by file path, so the CI lint job needs no jax install and runs in
+seconds.
+
+Rule catalog
+------------
+``jit-host-sync``        Host-side ops inside a jit-traced function:
+                         ``.item()`` / ``.tolist()`` / ``.block_until_ready()``
+                         / ``jax.device_get``, ``float()/int()/bool()`` on a
+                         traced value, and ``np.*`` calls on traced arguments
+                         (numpy pulls the value to the host mid-trace).
+``hot-host-sync``        Device syncs inside a *host* hot loop (a loop that
+                         calls a compiled step): ``.item()`` /
+                         ``.block_until_ready()`` / ``jax.block_until_ready``
+                         on any value, and ``float()/int()/np.asarray()`` on
+                         values returned by compiled calls. Syncing once
+                         after the loop is the fix pattern (and is not
+                         flagged).
+``tracer-branch``        Python ``if``/``while``/``for range()`` control flow
+                         on a traced value inside a jit-traced function —
+                         either a bug (ConcretizationTypeError) or a silent
+                         per-value retrace. Mark the arg static or use
+                         ``lax.cond``/``jnp.where``. Keyword-only params are
+                         assumed static (this repo's jit-variant idiom), as
+                         are ``x.shape``/``x.ndim``/``x.dtype`` and
+                         comparisons against string constants.
+``prng-key-reuse``       The same PRNG key Name consumed by two
+                         ``jax.random.*`` calls without an intervening
+                         rebind, or consumed inside a loop that never
+                         rebinds it — the draws are identical/correlated,
+                         not independent. ``split``/``fold_in`` first.
+``nonhashable-static``   A list/dict/set literal passed for a parameter the
+                         function declares static (``static_argnames`` /
+                         ``static_argnums``) — jit static args must be
+                         hashable; this raises at call time.
+``fstring-sync``         An f-string interpolating a traced value (in a jit
+                         function) or a compiled-call result (in a host hot
+                         loop) — formatting forces a device sync / embeds a
+                         tracer repr into logs.
+``pallas-grid-floordiv`` A ``pallas_call`` grid dimension computed with plain
+                         ``//``: when the axis is not a block multiple the
+                         remainder is silently never visited. Use
+                         ``pl.cdiv`` (+ in-kernel masking) or assert
+                         divisibility.
+``pallas-accum-dtype``   A dot (``jnp.dot`` / ``lax.dot`` / ``dot_general`` /
+                         ``pl.dot`` / ``@``) inside a Pallas kernel with
+                         neither ``preferred_element_type=`` nor an operand
+                         visibly cast to float32 — bf16 inputs would
+                         accumulate in bf16 (the mixed-precision rule:
+                         accumulate matmuls in fp32).
+``pallas-partial-mask``  A ``pallas_call`` whose grid uses ``cdiv`` (so the
+                         last block is partial) but whose kernel shows no
+                         masking construct (``pl.when``, ``jnp.where``, a
+                         ``mask=`` kwarg, or an iota/program_id bound check)
+                         — the tail block reads/writes out-of-range rows.
+
+Jit-context detection is syntactic and documented: a function is analyzed as
+jit-traced when it (a) is decorated with ``jax.jit`` (bare or via
+``functools.partial``), (b) is passed by name to ``jax.jit(...)`` anywhere
+in the module, (c) is a *method* named ``_*_impl`` (the engine's lazily
+jitted step idiom), or (d) is a Pallas kernel (passed — possibly through one
+``functools.partial`` — to ``pallas_call``).
+
+Suppression
+-----------
+A finding is suppressed by an annotation on its line or the line above::
+
+    x = np.asarray(tok)  # jaxlint: allow[hot-host-sync] the one designed
+                         # host sync per step: the scheduler needs the token
+
+The bracket lists one or more rule ids (comma-separated); everything after
+the bracket is the REQUIRED one-line justification. A bare annotation
+(``allow-missing-reason``) or an unknown rule id (``allow-unknown-rule``)
+is itself reported, so the allowlist stays auditable.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+RULES: Dict[str, str] = {
+    "jit-host-sync": "host-side op on a traced value inside a jit function",
+    "hot-host-sync": "device sync inside a host hot loop",
+    "tracer-branch": "Python control flow on a traced value",
+    "prng-key-reuse": "PRNG key consumed twice without split/fold_in",
+    "nonhashable-static": "unhashable literal passed for a static jit arg",
+    "fstring-sync": "f-string interpolating a traced/device value",
+    "pallas-grid-floordiv": "pallas grid built with plain // (drops the "
+                            "partial tail block)",
+    "pallas-accum-dtype": "kernel dot without fp32 accumulation",
+    "pallas-partial-mask": "cdiv grid but no masking in the kernel",
+    "allow-unknown-rule": "jaxlint allow[] names a rule that does not exist",
+    "allow-missing-reason": "jaxlint allow[] without a justification",
+}
+
+# array attributes that are static under tracing (reading them never syncs)
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "weak_type", "sharding",
+                "itemsize", "aval"}
+
+# jax.random functions that CONSUME a key (first positional arg)
+_KEY_CONSUMERS = {
+    "split", "fold_in", "normal", "uniform", "categorical", "bernoulli",
+    "gumbel", "randint", "truncated_normal", "permutation", "choice",
+    "bits", "exponential", "poisson", "gamma", "beta", "laplace", "cauchy",
+    "dirichlet", "loggamma", "rademacher", "t", "orthogonal", "ball",
+}
+
+_SYNC_METHODS = {"item", "tolist", "block_until_ready", "copy_to_host_async"}
+
+_ALLOW_RE = re.compile(r"#\s*jaxlint:\s*allow\[([^\]]*)\]\s*[-—:]?\s*(.*)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    path: str
+    line: int
+    col: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: [{self.rule}] " \
+               f"{self.message}"
+
+
+# --------------------------------------------------------------- AST helpers --
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """'jax.random.normal' for a Name/Attribute chain, else None."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = _dotted(node.value)
+        return f"{base}.{node.attr}" if base else None
+    return None
+
+
+def _is_jit_ref(node: ast.AST) -> bool:
+    d = _dotted(node)
+    return d in ("jax.jit", "jit")
+
+
+def _is_partial_ref(node: ast.AST) -> bool:
+    d = _dotted(node)
+    return d in ("functools.partial", "partial")
+
+
+def _str_elements(node: ast.AST) -> Tuple[str, ...]:
+    """Constant strings of a tuple/list literal (for static_argnames)."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return tuple(e.value for e in node.elts
+                     if isinstance(e, ast.Constant)
+                     and isinstance(e.value, str))
+    return ()
+
+
+def _int_elements(node: ast.AST) -> Tuple[int, ...]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return tuple(e.value for e in node.elts
+                     if isinstance(e, ast.Constant)
+                     and isinstance(e.value, int))
+    return ()
+
+
+def _assigned_names(target: ast.AST) -> List[str]:
+    if isinstance(target, ast.Name):
+        return [target.id]
+    if isinstance(target, (ast.Tuple, ast.List)):
+        out: List[str] = []
+        for e in target.elts:
+            out.extend(_assigned_names(e))
+        return out
+    return []
+
+
+def _contains_call_to(tree: ast.AST, names: Set[str]) -> bool:
+    """True if the subtree calls any bare name in ``names`` or contains a
+    double call ``f(...)(...)`` (the lazily-built compiled-step idiom)."""
+    for n in ast.walk(tree):
+        if isinstance(n, ast.Call):
+            if isinstance(n.func, ast.Call):
+                return True
+            if isinstance(n.func, ast.Name) and n.func.id in names:
+                return True
+    return False
+
+
+class _TracedUses(ast.NodeVisitor):
+    """Collect bare uses of traced names inside an expression, skipping
+    static contexts (shape/dtype attrs, len()/isinstance(), comparisons
+    against string constants)."""
+
+    def __init__(self, traced: Set[str]):
+        self.traced = traced
+        self.uses: List[ast.Name] = []
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        if node.attr in STATIC_ATTRS:
+            return                      # x.shape — static under tracing
+        self.visit(node.value)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        fn = _dotted(node.func)
+        if fn in ("len", "isinstance", "getattr", "hasattr", "type", "range"):
+            # len(x)/x.shape-style static introspection; range() handled by
+            # the caller for `for` loops (range over a traced bound is the
+            # finding itself, so the For visitor inspects args directly)
+            if fn == "range":
+                for a in node.args:
+                    self.visit(a)
+            return
+        for a in node.args:
+            self.visit(a)
+        for k in node.keywords:
+            self.visit(k.value)
+
+    def visit_Compare(self, node: ast.Compare) -> None:
+        if any(isinstance(c, ast.Constant) and isinstance(c.value, str)
+               for c in node.comparators):
+            return                      # `mixer == "attn"` — static dispatch
+        self.visit(node.left)
+        for c in node.comparators:
+            self.visit(c)
+
+    def visit_Name(self, node: ast.Name) -> None:
+        if node.id in self.traced:
+            self.uses.append(node)
+
+
+def _traced_uses(expr: ast.AST, traced: Set[str]) -> List[ast.Name]:
+    v = _TracedUses(traced)
+    v.visit(expr)
+    return v.uses
+
+
+def _expr_names(expr: ast.AST) -> Set[str]:
+    return {n.id for n in ast.walk(expr) if isinstance(n, ast.Name)}
+
+
+# ------------------------------------------------------------- module index --
+
+@dataclasses.dataclass
+class _JitInfo:
+    node: ast.AST                       # FunctionDef
+    how: str                            # "decorator" | "jit-call" | "_impl"
+
+
+class _ModuleIndex:
+    """One pass over the module: which functions are jit-traced, which are
+    Pallas kernels, which names alias jitted functions (and their static
+    params), and where the pallas_call sites are."""
+
+    def __init__(self, tree: ast.Module):
+        self.functions: Dict[str, ast.AST] = {}
+        self.jit_functions: Dict[str, _JitInfo] = {}
+        self.kernel_functions: Dict[str, ast.AST] = {}
+        self.pallas_sites: List[ast.Call] = []
+        # callable name -> static parameter names (for nonhashable-static)
+        self.static_params: Dict[str, Set[str]] = {}
+        # name -> kernel fn name (functools.partial(kern, ...) assignments)
+        partial_of: Dict[str, str] = {}
+
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.functions[node.name] = node
+
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._scan_def(node)
+            elif isinstance(node, ast.Assign) and isinstance(
+                    node.value, ast.Call):
+                call = node.value
+                names = []
+                for t in node.targets:
+                    names.extend(_assigned_names(t))
+                if _is_partial_ref(call.func) and call.args and isinstance(
+                        call.args[0], ast.Name):
+                    for nm in names:
+                        partial_of[nm] = call.args[0].id
+                if _is_jit_ref(call.func):
+                    statics = self._jit_static_names(call)
+                    for nm in names:
+                        if statics:
+                            self.static_params[nm] = statics
+            if isinstance(node, ast.Call) and _is_jit_ref(node.func) \
+                    and node.args:
+                tgt = node.args[0]
+                if isinstance(tgt, ast.Name) and tgt.id in self.functions:
+                    self.jit_functions.setdefault(
+                        tgt.id, _JitInfo(self.functions[tgt.id], "jit-call"))
+                    statics = self._jit_static_names(
+                        node, self.functions.get(tgt.id)
+                        if isinstance(tgt, ast.Name) else None)
+                    if statics and isinstance(tgt, ast.Name):
+                        self.static_params.setdefault(tgt.id, set()).update(
+                            statics)
+            if isinstance(node, ast.Call):
+                d = _dotted(node.func)
+                if d and d.split(".")[-1] == "pallas_call" and node.args:
+                    self.pallas_sites.append(node)
+                    kern = node.args[0]
+                    kname = None
+                    if isinstance(kern, ast.Name):
+                        kname = partial_of.get(kern.id, kern.id)
+                    elif isinstance(kern, ast.Call) and _is_partial_ref(
+                            kern.func) and kern.args and isinstance(
+                            kern.args[0], ast.Name):
+                        kname = kern.args[0].id
+                    if kname and kname in self.functions:
+                        self.kernel_functions[kname] = self.functions[kname]
+
+    def _jit_static_names(self, call: ast.Call,
+                          fn: Optional[ast.AST] = None) -> Set[str]:
+        """static_argnames strings (+ static_argnums resolved through the
+        def when available)."""
+        out: Set[str] = set()
+        for kw in call.keywords:
+            if kw.arg == "static_argnames":
+                out.update(_str_elements(kw.value))
+            elif kw.arg == "static_argnums" and fn is not None:
+                params = [a.arg for a in fn.args.args]
+                for i in _int_elements(kw.value):
+                    if 0 <= i < len(params):
+                        out.add(params[i])
+        return out
+
+    def _scan_def(self, node) -> None:
+        for dec in node.decorator_list:
+            if _is_jit_ref(dec):
+                self.jit_functions[node.name] = _JitInfo(node, "decorator")
+            elif isinstance(dec, ast.Call):
+                if _is_jit_ref(dec.func):
+                    self.jit_functions[node.name] = _JitInfo(node, "decorator")
+                    statics = self._jit_static_names(dec, node)
+                    if statics:
+                        self.static_params[node.name] = statics
+                elif _is_partial_ref(dec.func) and dec.args and _is_jit_ref(
+                        dec.args[0]):
+                    self.jit_functions[node.name] = _JitInfo(node, "decorator")
+                    statics = self._jit_static_names(dec, node)
+                    if statics:
+                        self.static_params[node.name] = statics
+        # the engine idiom: methods named _*_impl are jitted lazily by a
+        # builder the AST cannot follow; treat them as jit-traced
+        args = node.args.args
+        if node.name.endswith("_impl") and args and args[0].arg == "self":
+            self.jit_functions.setdefault(
+                node.name, _JitInfo(node, "_impl"))
+
+
+# ------------------------------------------------------------ the lint pass --
+
+class _Linter:
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.source = source
+        self.findings: List[Finding] = []
+        self.allows: Dict[int, Tuple[Set[str], str]] = {}
+
+    def report(self, node: ast.AST, rule: str, message: str) -> None:
+        line = getattr(node, "lineno", 0)
+        col = getattr(node, "col_offset", 0)
+        if self._allowed(line, rule):
+            return
+        self.findings.append(Finding(self.path, line, col, rule, message))
+
+    def _allowed(self, line: int, rule: str) -> bool:
+        """An allow[] on the finding's line, or anywhere in the contiguous
+        comment block immediately above it (multi-line justifications)."""
+        lines = self.source.splitlines()
+
+        def hit(ln: int) -> bool:
+            entry = self.allows.get(ln)
+            return bool(entry) and (rule in entry[0] or "*" in entry[0])
+
+        if hit(line):
+            return True
+        ln = line - 1
+        while ln >= 1 and ln <= len(lines) \
+                and lines[ln - 1].lstrip().startswith("#"):
+            if hit(ln):
+                return True
+            ln -= 1
+        return False
+
+    # ---------------------------------------------------------- annotations --
+    def _parse_allows(self) -> None:
+        for i, text in enumerate(self.source.splitlines(), start=1):
+            m = _ALLOW_RE.search(text)
+            if not m:
+                continue
+            rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+            reason = m.group(2).strip()
+            self.allows[i] = (rules, reason)
+            for r in rules - set(RULES) - {"*"}:
+                self.findings.append(Finding(
+                    self.path, i, 0, "allow-unknown-rule",
+                    f"allow[] names unknown rule {r!r} (see --list-rules)"))
+            if not reason:
+                self.findings.append(Finding(
+                    self.path, i, 0, "allow-missing-reason",
+                    "allow[] needs a one-line justification after the "
+                    "bracket"))
+
+    # ----------------------------------------------------------------- run --
+    def run(self) -> List[Finding]:
+        self._parse_allows()
+        try:
+            tree = ast.parse(self.source, filename=self.path)
+        except SyntaxError as e:
+            self.findings.append(Finding(
+                self.path, e.lineno or 0, e.offset or 0, "jit-host-sync",
+                f"file does not parse: {e.msg}"))
+            return self.findings
+        index = _ModuleIndex(tree)
+
+        analyzed_jit = {id(i.node) for i in index.jit_functions.values()}
+        analyzed_jit |= {id(f) for f in index.kernel_functions.values()}
+        for name, info in index.jit_functions.items():
+            self._check_jit_function(info.node)
+        for name, fn in index.kernel_functions.items():
+            self._check_kernel(fn)
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and id(node) not in analyzed_jit:
+                self._check_host_function(node, index)
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+                pass
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._check_key_reuse(node)
+        self._check_static_call_sites(tree, index)
+        for site in index.pallas_sites:
+            self._check_pallas_site(site, index)
+        return self.findings
+
+    # ---------------------------------------------------- jit-traced bodies --
+    def _traced_names(self, fn) -> Set[str]:
+        """Positional params (minus self) + names derived from them by
+        assignment, one forward pass in source order."""
+        traced: Set[str] = set()
+        params = fn.args.posonlyargs + fn.args.args
+        for a in params:
+            if a.arg != "self":
+                traced.add(a.arg)
+        if fn.args.vararg:
+            traced.add(fn.args.vararg.arg)
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign):
+                if _traced_uses(node.value, traced):
+                    for t in node.targets:
+                        traced.update(_assigned_names(t))
+            elif isinstance(node, ast.AugAssign):
+                if _traced_uses(node.value, traced):
+                    traced.update(_assigned_names(node.target))
+        return traced
+
+    def _check_jit_function(self, fn) -> None:
+        traced = self._traced_names(fn)
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                self._jit_call(node, traced)
+            elif isinstance(node, (ast.If, ast.While)):
+                uses = _traced_uses(node.test, traced)
+                if uses:
+                    self.report(
+                        node, "tracer-branch",
+                        f"`{fn.name}` is jit-traced but branches on "
+                        f"`{uses[0].id}` — a traced value. Mark it static "
+                        "(static_argnames / keyword-only flag) or use "
+                        "lax.cond / jnp.where")
+            elif isinstance(node, ast.For):
+                uses = _traced_uses(node.iter, traced)
+                if uses:
+                    self.report(
+                        node, "tracer-branch",
+                        f"`{fn.name}` is jit-traced but iterates over a "
+                        f"range/sequence derived from `{uses[0].id}` — "
+                        "the loop unrolls per traced value; use "
+                        "lax.fori_loop / lax.scan")
+            elif isinstance(node, ast.JoinedStr):
+                for fv in (v for v in node.values
+                           if isinstance(v, ast.FormattedValue)):
+                    uses = _traced_uses(fv.value, traced)
+                    if uses:
+                        self.report(
+                            node, "fstring-sync",
+                            f"f-string formats traced value `{uses[0].id}` "
+                            "inside a jit function — this embeds a tracer "
+                            "repr (or forces a sync); use jax.debug.print")
+                        break
+
+    def _jit_call(self, node: ast.Call, traced: Set[str]) -> None:
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr in _SYNC_METHODS:
+            self.report(node, "jit-host-sync",
+                        f".{node.func.attr}() inside a jit-traced function "
+                        "forces a host sync (or fails on a tracer)")
+            return
+        d = _dotted(node.func)
+        if d in ("jax.device_get", "device_get"):
+            self.report(node, "jit-host-sync",
+                        "jax.device_get inside a jit-traced function")
+            return
+        if d in ("float", "int", "bool") and len(node.args) == 1:
+            a = node.args[0]
+            bare = isinstance(a, ast.Name) and a.id in traced
+            sub = isinstance(a, ast.Subscript) and isinstance(
+                a.value, ast.Name) and a.value.id in traced
+            if bare or sub:
+                self.report(
+                    node, "jit-host-sync",
+                    f"{d}() on a traced value inside a jit function — "
+                    "ConcretizationTypeError at trace time or a silent "
+                    "host sync; keep it an array (astype) or pass it static")
+            return
+        if d and (d.startswith("np.") or d.startswith("numpy.")):
+            hit = None
+            for a in list(node.args) + [k.value for k in node.keywords]:
+                uses = _traced_uses(a, traced)
+                if uses:
+                    hit = uses[0].id
+                    break
+            if hit is not None:
+                self.report(
+                    node, "jit-host-sync",
+                    f"{d}(...) on traced value `{hit}` inside a jit "
+                    "function — numpy executes on the host; use jnp")
+
+    # ---------------------------------------------------------- host bodies --
+    def _check_host_function(self, fn, index: _ModuleIndex) -> None:
+        compiled: Set[str] = set()
+        device: Set[str] = set()
+        host: Set[str] = set()
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Assign) or not isinstance(
+                    node.value, ast.Call):
+                continue
+            call = node.value
+            names = []
+            for t in node.targets:
+                names.extend(_assigned_names(t))
+            d = _dotted(call.func)
+            if _is_jit_ref(call.func) or (
+                    d is not None and d.split(".")[-1].endswith("_fn")):
+                compiled.update(names)
+            elif isinstance(call.func, ast.Call) \
+                    or (isinstance(call.func, ast.Name)
+                        and call.func.id in compiled):
+                device.update(names)
+            elif d is not None and (d.startswith("np.")
+                                    or d.startswith("numpy.")):
+                host.update(names)
+        # second pass: calls of now-known compiled names feeding assignments
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and isinstance(
+                    node.value, ast.Call):
+                call = node.value
+                if isinstance(call.func, ast.Name) \
+                        and call.func.id in compiled:
+                    for t in node.targets:
+                        device.update(
+                            n for n in _assigned_names(t) if n not in host)
+        device -= host
+
+        for loop in ast.walk(fn):
+            if not isinstance(loop, (ast.For, ast.While)):
+                continue
+            if not _contains_call_to(loop, compiled):
+                continue
+            self._check_hot_loop(loop, fn, device)
+
+    def _check_hot_loop(self, loop, fn, device: Set[str]) -> None:
+        for node in ast.walk(loop):
+            if isinstance(node, ast.Call):
+                if isinstance(node.func, ast.Attribute) \
+                        and node.func.attr in _SYNC_METHODS:
+                    self.report(
+                        node, "hot-host-sync",
+                        f".{node.func.attr}() inside `{fn.name}`'s hot loop "
+                        "— per-step host sync serializes async dispatch; "
+                        "sync once after the loop")
+                    continue
+                d = _dotted(node.func)
+                if d in ("jax.block_until_ready", "jax.device_get"):
+                    self.report(
+                        node, "hot-host-sync",
+                        f"{d} inside `{fn.name}`'s hot loop — per-step "
+                        "host sync; sync once after the loop")
+                    continue
+                if d in ("float", "int", "np.asarray", "np.array",
+                         "numpy.asarray", "numpy.array") and node.args:
+                    a = node.args[0]
+                    nm = None
+                    if isinstance(a, ast.Name):
+                        nm = a.id
+                    elif isinstance(a, ast.Subscript) and isinstance(
+                            a.value, ast.Name):
+                        nm = a.value.id
+                    if nm in device:
+                        self.report(
+                            node, "hot-host-sync",
+                            f"{d}({nm}...) inside `{fn.name}`'s hot loop "
+                            "pulls a compiled-step result to the host every "
+                            "iteration — batch it or sync after the loop")
+            elif isinstance(node, ast.JoinedStr):
+                for fv in (v for v in node.values
+                           if isinstance(v, ast.FormattedValue)):
+                    names = _expr_names(fv.value) & device
+                    if names:
+                        self.report(
+                            node, "fstring-sync",
+                            f"f-string formats device value "
+                            f"`{sorted(names)[0]}` inside `{fn.name}`'s hot "
+                            "loop — formatting syncs every iteration")
+                        break
+
+    # ------------------------------------------------------------ key reuse --
+    def _check_key_reuse(self, fn) -> None:
+        consumed: Dict[str, int] = {}
+
+        def consumer_key(call: ast.Call) -> Optional[str]:
+            d = _dotted(call.func)
+            if not d:
+                return None
+            parts = d.split(".")
+            if parts[-1] not in _KEY_CONSUMERS:
+                return None
+            if not ("random" in parts or parts[0] in ("jr", "jrandom")):
+                # require a jax.random-ish namespace (or the common aliases)
+                # so e.g. str.split never matches
+                if len(parts) > 1:
+                    return None
+                return None
+            if call.args and isinstance(call.args[0], ast.Name):
+                return call.args[0].id
+            return None
+
+        def scan(stmts, in_loop: bool, loop_assigned: Set[str]) -> None:
+            for stmt in stmts:
+                for node in ast.walk(stmt):
+                    if isinstance(node, (ast.For, ast.While)) \
+                            and node is not stmt:
+                        continue
+                if isinstance(stmt, (ast.For, ast.While)):
+                    assigned_in = set()
+                    for n in ast.walk(stmt):
+                        if isinstance(n, ast.Assign):
+                            for t in n.targets:
+                                assigned_in.update(_assigned_names(t))
+                        elif isinstance(n, ast.AugAssign):
+                            assigned_in.update(_assigned_names(n.target))
+                    if isinstance(stmt, ast.For):
+                        assigned_in.update(_assigned_names(stmt.target))
+                    body = stmt.body + getattr(stmt, "orelse", [])
+                    scan(body, True, assigned_in)
+                    continue
+                if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    continue            # nested defs have their own pass
+                for node in ast.walk(stmt):
+                    if isinstance(node, ast.Call):
+                        key = consumer_key(node)
+                        if key is None:
+                            continue
+                        if key in consumed:
+                            self.report(
+                                node, "prng-key-reuse",
+                                f"PRNG key `{key}` already consumed at line "
+                                f"{consumed[key]} — draws correlate; "
+                                "split/fold_in first")
+                        elif in_loop and key not in loop_assigned:
+                            self.report(
+                                node, "prng-key-reuse",
+                                f"PRNG key `{key}` consumed inside a loop "
+                                "without being rebound — every iteration "
+                                "draws with the same key")
+                        else:
+                            consumed[key] = node.lineno
+                for node in ast.walk(stmt):
+                    if isinstance(node, ast.Assign):
+                        for t in node.targets:
+                            for nm in _assigned_names(t):
+                                consumed.pop(nm, None)
+
+        scan(fn.body, False, set())
+
+    # --------------------------------------------------- nonhashable-static --
+    def _check_static_call_sites(self, tree: ast.Module,
+                                 index: _ModuleIndex) -> None:
+        if not index.static_params:
+            return
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call) or not isinstance(
+                    node.func, ast.Name):
+                continue
+            statics = index.static_params.get(node.func.id)
+            if not statics:
+                continue
+            for kw in node.keywords:
+                if kw.arg in statics and isinstance(
+                        kw.value, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                                   ast.DictComp, ast.SetComp)):
+                    self.report(
+                        node, "nonhashable-static",
+                        f"static arg `{kw.arg}` of `{node.func.id}` gets an "
+                        "unhashable literal — jit static args must be "
+                        "hashable (use a tuple / frozen dataclass)")
+
+    # --------------------------------------------------------------- pallas --
+    def _grid_exprs(self, site: ast.Call) -> List[ast.AST]:
+        out: List[ast.AST] = []
+
+        def from_value(v: ast.AST) -> None:
+            if isinstance(v, (ast.Tuple, ast.List)):
+                out.extend(v.elts)
+            else:
+                out.append(v)
+
+        for kw in site.keywords:
+            if kw.arg == "grid":
+                from_value(kw.value)
+            elif kw.arg == "grid_spec" and isinstance(kw.value, ast.Call):
+                for inner in kw.value.keywords:
+                    if inner.arg == "grid":
+                        from_value(inner.value)
+        return out
+
+    def _check_pallas_site(self, site: ast.Call, index: _ModuleIndex) -> None:
+        grid = self._grid_exprs(site)
+        uses_cdiv = False
+        for e in grid:
+            for n in ast.walk(e):
+                if isinstance(n, ast.Call):
+                    d = _dotted(n.func)
+                    if d and d.split(".")[-1] in ("cdiv", "ceil_div"):
+                        uses_cdiv = True
+                if isinstance(n, ast.BinOp) and isinstance(
+                        n.op, ast.FloorDiv):
+                    # -(-a // b) is the ceil-div idiom, not a dropped tail
+                    if isinstance(n.left, ast.UnaryOp) and isinstance(
+                            n.left.op, ast.USub):
+                        uses_cdiv = True
+                        continue
+                    self.report(
+                        n, "pallas-grid-floordiv",
+                        "grid dimension uses plain // — a non-multiple "
+                        "axis silently skips its tail block; use pl.cdiv "
+                        "and mask the partial block")
+        if not uses_cdiv:
+            return
+        kern = site.args[0] if site.args else None
+        kname = None
+        if isinstance(kern, ast.Name):
+            kname = kern.id
+        elif isinstance(kern, ast.Call) and kern.args and isinstance(
+                kern.args[0], ast.Name):
+            kname = kern.args[0].id
+        fn = index.kernel_functions.get(kname) if kname else None
+        if fn is None:
+            return
+        if not self._kernel_has_masking(fn):
+            self.report(
+                site, "pallas-partial-mask",
+                f"grid uses cdiv (partial tail block) but kernel "
+                f"`{kname}` shows no masking (pl.when / jnp.where / "
+                "mask= / iota bound check)")
+
+    def _kernel_has_masking(self, fn) -> bool:
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                d = _dotted(node.func)
+                tail = d.split(".")[-1] if d else ""
+                if tail in ("when", "where", "broadcasted_iota", "iota",
+                            "program_id", "select"):
+                    return True
+                if any(kw.arg == "mask" for kw in node.keywords):
+                    return True
+        return False
+
+    def _check_kernel(self, fn) -> None:
+        """pallas-accum-dtype: dots must accumulate in fp32."""
+        f32: Set[str] = set()
+
+        def is_f32(expr: ast.AST) -> bool:
+            for n in ast.walk(expr):
+                if isinstance(n, ast.Call):
+                    if isinstance(n.func, ast.Attribute) \
+                            and n.func.attr == "astype":
+                        for a in list(n.args) + [k.value for k in n.keywords]:
+                            d = _dotted(a)
+                            if d in ("jnp.float32", "np.float32",
+                                     "jax.numpy.float32") or (
+                                    isinstance(a, ast.Constant)
+                                    and a.value == "float32"):
+                                return True
+                if isinstance(n, ast.Name) and n.id in f32:
+                    return True
+                d = _dotted(n)
+                if d in ("jnp.float32", "np.float32"):
+                    return True
+            return False
+
+        # forward pass: names assigned from visibly-fp32 expressions
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and is_f32(node.value):
+                for t in node.targets:
+                    f32.update(_assigned_names(t))
+
+        for node in ast.walk(fn):
+            dot = None
+            operands: List[ast.AST] = []
+            if isinstance(node, ast.Call):
+                d = _dotted(node.func)
+                tail = d.split(".")[-1] if d else ""
+                if tail in ("dot", "dot_general", "matmul"):
+                    dot = node
+                    operands = list(node.args[:2])
+                    if any(kw.arg == "preferred_element_type"
+                           for kw in node.keywords):
+                        continue
+            elif isinstance(node, ast.BinOp) and isinstance(
+                    node.op, ast.MatMult):
+                dot = node
+                operands = [node.left, node.right]
+            if dot is None:
+                continue
+            if any(is_f32(op) for op in operands):
+                continue
+            self.report(
+                dot, "pallas-accum-dtype",
+                f"dot in kernel `{fn.name}` has neither "
+                "preferred_element_type=jnp.float32 nor a visibly fp32 "
+                "operand — bf16 inputs would accumulate in bf16")
+
+
+# ------------------------------------------------------------------ drivers --
+
+def lint_source(source: str, path: str = "<string>") -> List[Finding]:
+    """Lint one module's source text; returns findings (possibly empty).
+
+    Deduped: nested hot loops (or a function reached via two contexts) can
+    visit the same node twice — one finding per (line, col, rule)."""
+    seen: Set[Tuple[int, int, str]] = set()
+    out: List[Finding] = []
+    for f in _Linter(path, source).run():
+        key = (f.line, f.col, f.rule)
+        if key not in seen:
+            seen.add(key)
+            out.append(f)
+    return out
+
+
+def iter_py_files(paths: Sequence[str]) -> Iterable[Path]:
+    for p in paths:
+        pth = Path(p)
+        if pth.is_dir():
+            yield from sorted(pth.rglob("*.py"))
+        elif pth.suffix == ".py":
+            yield pth
+
+
+def lint_paths(paths: Sequence[str]) -> List[Finding]:
+    findings: List[Finding] = []
+    for f in iter_py_files(paths):
+        findings.extend(lint_source(f.read_text(), str(f)))
+    return findings
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(
+        prog="jaxlint",
+        description="JAX/Pallas-aware static analysis (see module docstring "
+                    "for the rule catalog)")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to lint")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+    if args.list_rules:
+        width = max(len(r) for r in RULES)
+        for rule, desc in RULES.items():
+            print(f"{rule:<{width}}  {desc}")
+        return 0
+    findings = lint_paths(args.paths)
+    for f in findings:
+        print(f)
+    n_files = len(list(iter_py_files(args.paths)))
+    if findings:
+        print(f"jaxlint: {len(findings)} finding(s) in {n_files} file(s)")
+        return 1
+    print(f"jaxlint: clean ({n_files} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -83,6 +83,7 @@ def flash_attention_fwd(q, k, v, kv_len, *, causal, q_offset=0, window=0,
         causal=causal, q_offset=q_offset, window=window, scale=scale)
     out = pl.pallas_call(
         kern,
+        # jaxlint: allow[pallas-grid-floordiv] sq % block_q asserted above
         grid=(b * hq, sq // block_q),
         in_specs=[
             pl.BlockSpec((1, block_q, d), lambda n, i: (n, i, 0)),

@@ -54,6 +54,7 @@ def fused_residual_layernorm(x, residual, scale, bias=None, *, eps=1e-5,
             eps=eps, rms=rms)
     return pl.pallas_call(
         kern,
+        # jaxlint: allow[pallas-grid-floordiv] r % tile asserted above
         grid=(r // tile,),
         in_specs=in_specs,
         out_specs=row,

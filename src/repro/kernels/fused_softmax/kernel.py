@@ -40,6 +40,7 @@ def scale_mask_softmax(s, *, scale: float, causal: bool, q_offset: int = 0,
     return pl.pallas_call(
         functools.partial(_softmax_kernel, scale=scale, causal=causal,
                           q_offset=q_offset, tile_q=tile),
+        # jaxlint: allow[pallas-grid-floordiv] sq % tile asserted above
         grid=(n, sq // tile),
         in_specs=[spec],
         out_specs=spec,

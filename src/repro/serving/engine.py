@@ -77,6 +77,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from ..analysis.sanitize import (check_engine, check_finite_probe,
+                                 sanitize_enabled)
 from ..models import transformer as tf
 from ..models.model import Model
 from ..models.moe import capacity_per_row
@@ -158,7 +160,7 @@ class ContinuousEngine:
                  num_pages: int = 256, page_size: int = 16,
                  max_seq_len: int = 512, prefix_cache: bool = True,
                  prefill_chunk: Optional[int] = None, tp: int = 1,
-                 mesh=None):
+                 mesh=None, sanitize: Optional[bool] = None):
         arch = model.arch
         assert arch.family in SERVABLE_FAMILIES, \
             (f"continuous engine serves families {SERVABLE_FAMILIES}; "
@@ -184,6 +186,13 @@ class ContinuousEngine:
         assert prefill_chunk % page_size == 0 and prefill_chunk > 0, \
             "prefill chunk must be a positive page multiple"
         self.prefill_chunk = prefill_chunk
+        # runtime sanitizer (repro.analysis.sanitize): host invariant sweep
+        # after every request completion + NaN/Inf probes compiled into the
+        # steps. Static per engine — probe variants live in the jit cache
+        # keyed by construction, so toggling means a new engine, not a
+        # retrace of this one.
+        self.sanitize = sanitize_enabled() if sanitize is None \
+            else bool(sanitize)
         # prefix caching shares *pages*; a mamba mixer's recurrent state is
         # not page-decomposable (a cached KV page is useless without the SSM
         # state at its boundary), so SSM-bearing archs gate it off — loudly:
@@ -287,8 +296,12 @@ class ContinuousEngine:
         )
 
     # ------------------------------------------------------------ jit builders --
-    def _build(self, impl, in_specs, out_specs, donate):
-        """jit (and, at tp > 1, shard_map) one static variant of a step."""
+    def _build(self, impl, in_specs, out_specs, donate, key=()):
+        """jit (and, at tp > 1, shard_map) one static variant of a step.
+
+        ``key`` is the jit-cache key this compiled step lives under — unused
+        here, but the recompilation auditor (``repro.analysis.recompile``)
+        overrides this method and needs it to attribute trace signatures."""
         if self.mesh is not None:
             impl = shardlib.shard_map_tp(impl, self.mesh, in_specs, out_specs)
         return jax.jit(impl,
@@ -302,8 +315,11 @@ class ContinuousEngine:
             in_specs = (self._param_specs, self._pool_specs, P(None, None),
                         P(None), P(None), P(None), P(None), P(None), P(None),
                         P(None))
+            out_specs = (P(None), self._pool_specs)
+            if self.sanitize:
+                out_specs += (P(),)     # the replicated isfinite probe
             self._jit_cache[key] = self._build(
-                impl, in_specs, (P(None), self._pool_specs), donate=(1,))
+                impl, in_specs, out_specs, donate=(1,), key=key)
         return self._jit_cache[key]
 
     def _prefill_fn(self, final: bool, sampled: bool, filtered: bool):
@@ -313,8 +329,11 @@ class ContinuousEngine:
                                      sampled=sampled, filtered=filtered)
             in_specs = (self._param_specs, self._pool_specs, P(None, None),
                         P(None), P(), P(), P(), P(), P(), P(), P(), P())
+            out_specs = (P(), self._pool_specs)
+            if self.sanitize:
+                out_specs += (P(),)
             self._jit_cache[key] = self._build(
-                impl, in_specs, (P(), self._pool_specs), donate=(1,))
+                impl, in_specs, out_specs, donate=(1,), key=key)
         return self._jit_cache[key]
 
     def _copy_page_fn(self):
@@ -323,7 +342,7 @@ class ContinuousEngine:
             # pools are argument 0 here, not 1
             self._jit_cache[key] = self._build(
                 self._copy_page_impl, (self._pool_specs, P(), P()),
-                self._pool_specs, donate=(0,))
+                self._pool_specs, donate=(0,), key=key)
         return self._jit_cache[key]
 
     def _tp_collective_bytes(self, positions: int) -> int:
@@ -357,9 +376,16 @@ class ContinuousEngine:
                                          tp_axis=self.tp_axis)
         logits = self.model._logits(params, x)[:, 0]
         if not sampled:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32), pools
-        return sample_tokens(logits, seeds, positions, temps, top_ks,
-                             top_ps, filtered=filtered), pools
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            tok = sample_tokens(logits, seeds, positions, temps, top_ks,
+                                top_ps, filtered=filtered)
+        if self.sanitize:
+            # inactive slots read the null page and may legitimately produce
+            # junk — probe only rows with at least one real token resident
+            live = jnp.isfinite(logits) | (seq_lens[:, None] == 0)
+            return tok, pools, live.all()
+        return tok, pools
 
     def _prefill_impl(self, params, pools, tokens, page_row, slot, start,
                       total, moe_cap, seed, temp, top_k, top_p, *, final,
@@ -381,14 +407,23 @@ class ContinuousEngine:
                                           x, page_row, start, total, slot,
                                           moe_cap, tp_axis=self.tp_axis)
         if not final:
+            if self.sanitize:
+                # chunk-boundary probe: activations of the chunk's valid
+                # positions (pad rows past ``total - start`` may be junk)
+                pos = start + jnp.arange(x.shape[1])
+                live = jnp.isfinite(x) | (pos >= total)[None, :, None]
+                return jnp.zeros((), jnp.int32), pools, live.all()
             return jnp.zeros((), jnp.int32), pools
         xl = tf.chunk_final_hidden(x, start, total)
         logits = self.model._logits(params, xl)[:, 0]
         if not sampled:
-            return jnp.argmax(logits[0], axis=-1).astype(jnp.int32), pools
-        tok = sample_tokens(logits, seed[None], total[None], temp[None],
-                            top_k[None], top_p[None], filtered=filtered)
-        return tok[0], pools
+            tok = jnp.argmax(logits[0], axis=-1).astype(jnp.int32)
+        else:
+            tok = sample_tokens(logits, seed[None], total[None], temp[None],
+                                top_k[None], top_p[None], filtered=filtered)[0]
+        if self.sanitize:
+            return tok, pools, jnp.isfinite(logits).all()
+        return tok, pools
 
     def _copy_page_impl(self, pools, src, dst):
         """Copy-on-write: duplicate one physical page across every attention
@@ -442,12 +477,19 @@ class ContinuousEngine:
             # math the static engine's dispatch uses (capacity_per_row)
             moe_cap = capacity_per_row(seq.prefill_target, self.arch.moe) \
                 if self.arch.moe is not None else 0
-            tok, self.pools = prefill(
+            out = prefill(
                 self.params, self.pools, jnp.asarray(chunk), page_row,
                 jnp.int32(seq.slot), jnp.int32(start), jnp.int32(end),
                 jnp.int32(moe_cap),
                 jnp.uint32(sp.seed), jnp.float32(sp.temperature),
                 jnp.int32(sp.top_k), jnp.float32(sp.top_p))
+            if self.sanitize:
+                tok, self.pools, probe = out
+                check_finite_probe(
+                    probe, f"prefill chunk [{start}:{end}) of request "
+                           f"{seq.request.uid} (final={final})")
+            else:
+                tok, self.pools = out
             seq.prefilled = end
             self.prefill_tokens += end - start
             self.collective_bytes += self._tp_collective_bytes(
@@ -456,6 +498,9 @@ class ContinuousEngine:
                 self._prefilling.popleft()
                 self.prefills += 1
                 sched.register_prefix(seq.slot, ctx)
+                # jaxlint: allow[hot-host-sync] the scheduler must see the
+                # chunk's token before it can admit/close the sequence —
+                # one designed sync per prefill chunk, not per model step
                 seq.generated.append(int(tok))
                 seq.token_times.append(now())
             return
@@ -496,6 +541,10 @@ class ContinuousEngine:
             if self.prefix_cache_off_reason is not None:
                 results[seq.request.uid]["prefix_cache"] = \
                     f"off: {self.prefix_cache_off_reason}"
+            if self.sanitize:
+                # full host-invariant sweep at every request boundary: a
+                # leak/desync raises naming the request that exposed it
+                check_engine(self)
 
         while pending or sched.has_work:
             while pending and pending[0].arrival <= now():
@@ -548,8 +597,18 @@ class ContinuousEngine:
                         skip += max(wait, 1e-9)
                     continue
                 if sched.queue:
-                    raise RuntimeError(
-                        "queue stalled: page pool cannot admit any request")
+                    # not necessarily a stall: if the last running sequence
+                    # finished THIS iteration (a preemption replay whose
+                    # final chunk completed it), admission ran earlier while
+                    # still gated behind that prefill — retry before
+                    # declaring the pool dead
+                    seq = sched.admit_next()
+                    if seq is None:
+                        raise RuntimeError(
+                            "queue stalled: page pool cannot admit any "
+                            "request")
+                    self._start_prefill(seq)
+                    continue
                 break
 
             sched.ensure_capacity()     # may preempt; victims re-enter later
@@ -600,12 +659,20 @@ class ContinuousEngine:
                     seeds, positions, temps, top_ks, top_ps))
             else:
                 sampling_args = self._null_sampling
-            next_tokens, self.pools = self._decode_fn(sampled, filtered)(
+            out = self._decode_fn(sampled, filtered)(
                 self.params, self.pools, jnp.asarray(page_table),
                 jnp.asarray(seq_lens), jnp.asarray(tokens),
                 *sampling_args)
+            if self.sanitize:
+                next_tokens, self.pools, probe = out
+                check_finite_probe(probe, f"decode step {self.steps}")
+            else:
+                next_tokens, self.pools = out
             self.steps += 1
             self.collective_bytes += self._tp_collective_bytes(self.num_slots)
+            # jaxlint: allow[hot-host-sync] THE per-step sync: continuous
+            # batching is host-driven — stop checks and slot reuse need
+            # this step's tokens before the next batch can be scheduled
             next_np = np.asarray(next_tokens)
             t_tok = now()
             for slot in slots:
@@ -628,6 +695,21 @@ class ContinuousEngine:
         """Distinct physical pages held — with prefix sharing this undercuts
         the logical page count (the dedup the README's memory math prices)."""
         return self.scheduler.allocator.used_count
+
+    def trace_stats(self) -> Dict[str, int]:
+        """Jit-cache accounting: ``variants`` is the number of static step
+        variants traffic actually exercised, ``traces`` the total XLA traces
+        behind them, and ``excess`` their difference — nonzero means some
+        variant retraced after its first call (a shape or weak-type leak into
+        the traced signature), exactly what the recompilation auditor
+        (``repro.analysis.recompile``) and the benchmark gate pin to zero."""
+        variants = len(self._jit_cache)
+        traces = 0
+        for fn in self._jit_cache.values():
+            size = getattr(fn, "_cache_size", None)
+            traces += int(size()) if size is not None else 1
+        return {"variants": variants, "traces": traces,
+                "excess": traces - variants}
 
     def tp_stats(self) -> Dict[str, object]:
         """Tensor-parallel accounting for the benchmark JSON.

@@ -1,0 +1,531 @@
+"""jaxlint rule fixtures: every rule has at least one true-positive snippet
+(the defect is reported) and one true-negative (the correct idiom is not),
+plus the allow-annotation contract and the acceptance gate that the repo's
+own tree lints clean.
+
+The linter is stdlib-only AST analysis, so these tests never import jax —
+the fixtures are strings, never executed.
+"""
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.lint import RULES, lint_source
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def rules_of(src: str):
+    return [f.rule for f in lint_source(src)]
+
+
+def assert_flags(src: str, rule: str):
+    found = rules_of(src)
+    assert rule in found, f"expected {rule}, got {found}\n--\n{src}"
+
+
+def assert_clean(src: str, rule: str):
+    found = rules_of(src)
+    assert rule not in found, f"false positive {rule}: " \
+        f"{[str(f) for f in lint_source(src)]}\n--\n{src}"
+
+
+# ------------------------------------------------------------ jit-host-sync --
+
+def test_jit_host_sync_item_flagged():
+    assert_flags("""
+import jax
+
+@jax.jit
+def f(x):
+    return x.item()
+""", "jit-host-sync")
+
+
+def test_jit_host_sync_float_on_traced_flagged():
+    assert_flags("""
+import jax
+
+@jax.jit
+def f(x):
+    return float(x)
+""", "jit-host-sync")
+
+
+def test_jit_host_sync_numpy_on_traced_flagged():
+    assert_flags("""
+import jax
+import numpy as np
+
+@jax.jit
+def f(x):
+    return np.asarray(x) + 1
+""", "jit-host-sync")
+
+
+def test_jit_host_sync_applies_to_jit_call_targets():
+    # jit applied by name, not decorator — same trace context
+    assert_flags("""
+import jax
+
+def step(x):
+    return x.tolist()
+
+g = jax.jit(step)
+""", "jit-host-sync")
+
+
+def test_jit_host_sync_shape_access_clean():
+    assert_clean("""
+import jax
+
+@jax.jit
+def f(x):
+    b = x.shape[0]
+    return x.reshape(b, -1)
+""", "jit-host-sync")
+
+
+def test_jit_host_sync_numpy_on_host_value_clean():
+    assert_clean("""
+import jax
+import numpy as np
+
+@jax.jit
+def f(x, *, n):
+    mask = np.zeros((n,), np.int32)      # n is keyword-only -> static
+    return x * mask
+""", "jit-host-sync")
+
+
+# ------------------------------------------------------------ hot-host-sync --
+
+def test_hot_host_sync_per_step_pull_flagged():
+    assert_flags("""
+import jax
+import numpy as np
+
+def serve(xs):
+    step = jax.jit(lambda x: x + 1)
+    out = []
+    for x in xs:
+        y = step(x)
+        out.append(float(y))
+    return out
+""", "hot-host-sync")
+
+
+def test_hot_host_sync_block_until_ready_in_loop_flagged():
+    assert_flags("""
+import jax
+
+def bench(xs):
+    step = jax.jit(lambda x: x + 1)
+    for x in xs:
+        step(x).block_until_ready()
+""", "hot-host-sync")
+
+
+def test_hot_host_sync_engine_fn_idiom_flagged():
+    # `self._decode_fn(...)(...)` — a compiled step fetched then called
+    assert_flags("""
+import numpy as np
+
+class Engine:
+    def run(self, steps):
+        for _ in range(steps):
+            toks, self.pools = self._decode_fn(True, False)(self.pools)
+            out = np.asarray(toks)
+""", "hot-host-sync")
+
+
+def test_hot_host_sync_post_loop_sync_clean():
+    assert_clean("""
+import jax
+
+def serve(xs):
+    step = jax.jit(lambda x: x + 1)
+    ys = []
+    for x in xs:
+        ys.append(step(x))
+    jax.block_until_ready(ys)
+    return ys
+""", "hot-host-sync")
+
+
+def test_hot_host_sync_host_array_indexing_clean():
+    # int() on a numpy-derived name is host work, not a device sync
+    assert_clean("""
+import jax
+import numpy as np
+
+def serve(xs):
+    step = jax.jit(lambda x: x + 1)
+    for x in xs:
+        y = step(x)
+        y_np = np.asarray(y)  # jaxlint: allow[hot-host-sync] fixture
+        first = int(y_np[0])
+""", "hot-host-sync")
+
+
+# ------------------------------------------------------------ tracer-branch --
+
+def test_tracer_branch_if_flagged():
+    assert_flags("""
+import jax
+
+@jax.jit
+def f(x):
+    if x > 0:
+        return x
+    return -x
+""", "tracer-branch")
+
+
+def test_tracer_branch_for_over_traced_flagged():
+    assert_flags("""
+import jax
+
+@jax.jit
+def f(x, n):
+    acc = x
+    for _ in range(n):
+        acc = acc + 1
+    return acc
+""", "tracer-branch")
+
+
+def test_tracer_branch_keyword_only_flag_clean():
+    # the repo's jit-variant idiom: keyword-only params are static flags
+    assert_clean("""
+import jax
+
+@jax.jit
+def f(x, *, sampled):
+    if sampled:
+        return x * 2
+    return x
+""", "tracer-branch")
+
+
+def test_tracer_branch_shape_dispatch_clean():
+    assert_clean("""
+import jax
+
+@jax.jit
+def f(x):
+    if x.ndim == 2:
+        return x
+    return x[None]
+""", "tracer-branch")
+
+
+# ----------------------------------------------------------- prng-key-reuse --
+
+def test_key_reuse_double_consumption_flagged():
+    assert_flags("""
+import jax
+
+def f(key):
+    a = jax.random.normal(key, (4,))
+    b = jax.random.uniform(key, (4,))
+    return a + b
+""", "prng-key-reuse")
+
+
+def test_key_reuse_in_loop_without_rebind_flagged():
+    assert_flags("""
+import jax
+
+def f(key):
+    out = []
+    for _ in range(4):
+        out.append(jax.random.normal(key, ()))
+    return out
+""", "prng-key-reuse")
+
+
+def test_key_reuse_split_clean():
+    assert_clean("""
+import jax
+
+def f(key):
+    k1, k2 = jax.random.split(key)
+    a = jax.random.normal(k1, (4,))
+    b = jax.random.uniform(k2, (4,))
+    return a + b
+""", "prng-key-reuse")
+
+
+def test_key_reuse_loop_rebind_clean():
+    assert_clean("""
+import jax
+
+def f(key):
+    out = []
+    for _ in range(4):
+        key, sub = jax.random.split(key)
+        out.append(jax.random.normal(sub, ()))
+    return out
+""", "prng-key-reuse")
+
+
+# ------------------------------------------------------- nonhashable-static --
+
+def test_nonhashable_static_list_flagged():
+    assert_flags("""
+import jax
+
+def f(x, sizes):
+    return x
+
+g = jax.jit(f, static_argnames=("sizes",))
+y = g(1, sizes=[1, 2, 3])
+""", "nonhashable-static")
+
+
+def test_nonhashable_static_tuple_clean():
+    assert_clean("""
+import jax
+
+def f(x, sizes):
+    return x
+
+g = jax.jit(f, static_argnames=("sizes",))
+y = g(1, sizes=(1, 2, 3))
+""", "nonhashable-static")
+
+
+# --------------------------------------------------------------- fstring-sync --
+
+def test_fstring_on_traced_flagged():
+    assert_flags("""
+import jax
+
+@jax.jit
+def f(x):
+    print(f"x is {x}")
+    return x
+""", "fstring-sync")
+
+
+def test_fstring_on_shape_clean():
+    assert_clean("""
+import jax
+
+@jax.jit
+def f(x):
+    print(f"shape {x.shape}")
+    return x
+""", "fstring-sync")
+
+
+def test_fstring_on_device_value_in_hot_loop_flagged():
+    assert_flags("""
+import jax
+
+def serve(xs, log):
+    step = jax.jit(lambda x: x + 1)
+    for x in xs:
+        y = step(x)
+        log(f"step result {y}")
+""", "fstring-sync")
+
+
+# ------------------------------------------------------- pallas-grid-floordiv --
+
+def test_pallas_grid_floordiv_flagged():
+    assert_flags("""
+from jax.experimental import pallas as pl
+import jax
+
+def kern(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2
+
+def call(x):
+    return pl.pallas_call(kern, grid=(x.shape[0] // 8,),
+                          out_shape=x)(x)
+""", "pallas-grid-floordiv")
+
+
+def test_pallas_grid_cdiv_clean():
+    assert_clean("""
+from jax.experimental import pallas as pl
+import jax.numpy as jnp
+
+def kern(x_ref, o_ref):
+    pl.when(pl.program_id(0) < 4)(lambda: None)
+    o_ref[...] = x_ref[...] * 2
+
+def call(x):
+    return pl.pallas_call(kern, grid=(pl.cdiv(x.shape[0], 8),),
+                          out_shape=x)(x)
+""", "pallas-grid-floordiv")
+
+
+def test_pallas_grid_negative_floordiv_ceil_idiom_clean():
+    assert_clean("""
+from jax.experimental import pallas as pl
+
+def kern(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+def call(x, n):
+    return pl.pallas_call(kern, grid=(-(-n // 8),), out_shape=x)(x)
+""", "pallas-grid-floordiv")
+
+
+# -------------------------------------------------------- pallas-accum-dtype --
+
+def test_pallas_accum_dtype_bare_dot_flagged():
+    assert_flags("""
+from jax.experimental import pallas as pl
+import jax.numpy as jnp
+
+def kern(q_ref, k_ref, o_ref):
+    o_ref[...] = jnp.dot(q_ref[...], k_ref[...])
+
+def call(q, k, out):
+    return pl.pallas_call(kern, grid=(4,), out_shape=out)(q, k)
+""", "pallas-accum-dtype")
+
+
+def test_pallas_accum_dtype_preferred_element_type_clean():
+    assert_clean("""
+from jax.experimental import pallas as pl
+import jax.numpy as jnp
+
+def kern(q_ref, k_ref, o_ref):
+    o_ref[...] = jnp.dot(q_ref[...], k_ref[...],
+                         preferred_element_type=jnp.float32)
+
+def call(q, k, out):
+    return pl.pallas_call(kern, grid=(4,), out_shape=out)(q, k)
+""", "pallas-accum-dtype")
+
+
+def test_pallas_accum_dtype_fp32_cast_operand_clean():
+    # the decode-attention kernels' idiom: operands astype'd to fp32 first
+    assert_clean("""
+from jax.experimental import pallas as pl
+import jax.numpy as jnp
+
+def kern(q_ref, k_ref, o_ref):
+    q = q_ref[...].astype(jnp.float32)
+    o_ref[...] = jnp.dot(q, k_ref[...])
+
+def call(q, k, out):
+    return pl.pallas_call(kern, grid=(4,), out_shape=out)(q, k)
+""", "pallas-accum-dtype")
+
+
+# ------------------------------------------------------- pallas-partial-mask --
+
+def test_pallas_partial_mask_cdiv_unmasked_flagged():
+    assert_flags("""
+from jax.experimental import pallas as pl
+
+def kern(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2
+
+def call(x, n):
+    return pl.pallas_call(kern, grid=(pl.cdiv(n, 8),), out_shape=x)(x)
+""", "pallas-partial-mask")
+
+
+def test_pallas_partial_mask_when_clean():
+    assert_clean("""
+from jax.experimental import pallas as pl
+
+def kern(x_ref, o_ref):
+    @pl.when(pl.program_id(0) < 3)
+    def _():
+        o_ref[...] = x_ref[...] * 2
+
+def call(x, n):
+    return pl.pallas_call(kern, grid=(pl.cdiv(n, 8),), out_shape=x)(x)
+""", "pallas-partial-mask")
+
+
+def test_pallas_exact_grid_needs_no_mask():
+    assert_clean("""
+from jax.experimental import pallas as pl
+
+def kern(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2
+
+def call(x):
+    r = x.shape[0]
+    assert r % 8 == 0
+    # jaxlint: allow[pallas-grid-floordiv] divisibility asserted above
+    return pl.pallas_call(kern, grid=(r // 8,), out_shape=x)(x)
+""", "pallas-partial-mask")
+
+
+# ---------------------------------------------------------------- allow[] ----
+
+def test_allow_suppresses_on_same_line():
+    assert_clean("""
+import jax
+
+@jax.jit
+def f(x):
+    return x.item()  # jaxlint: allow[jit-host-sync] fixture justification
+""", "jit-host-sync")
+
+
+def test_allow_suppresses_from_comment_block_above():
+    assert_clean("""
+import jax
+
+@jax.jit
+def f(x):
+    # jaxlint: allow[jit-host-sync] the one designed sync; the host
+    # scheduler needs this value before the next step
+    return x.item()
+""", "jit-host-sync")
+
+
+def test_allow_does_not_leak_to_other_lines():
+    src = """
+import jax
+
+@jax.jit
+def f(x):
+    y = x.item()  # jaxlint: allow[jit-host-sync] fixture
+    return float(x)
+"""
+    assert rules_of(src).count("jit-host-sync") == 1
+
+
+def test_allow_unknown_rule_reported():
+    assert_flags("""
+x = 1  # jaxlint: allow[definitely-not-a-rule] why not
+""", "allow-unknown-rule")
+
+
+def test_allow_missing_reason_reported():
+    assert_flags("""
+import jax
+
+@jax.jit
+def f(x):
+    return x.item()  # jaxlint: allow[jit-host-sync]
+""", "allow-missing-reason")
+
+
+def test_rule_catalog_is_documented():
+    # every reportable rule id has a catalog entry (drives --list-rules)
+    for f in lint_source("import jax\n@jax.jit\ndef f(x):\n    return x.item()\n"):
+        assert f.rule in RULES
+
+
+# ------------------------------------------------------------ the real tree --
+
+@pytest.mark.parametrize("tree", ["src", "benchmarks", "tools"])
+def test_repo_lints_clean(tree):
+    """The acceptance gate: the repo's own code has no unannotated
+    violations (CI runs the same check as a dedicated lint job)."""
+    from repro.analysis.lint import lint_paths
+    findings = lint_paths([str(ROOT / tree)])
+    assert not findings, "\n".join(str(f) for f in findings)

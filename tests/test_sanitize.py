@@ -1,0 +1,232 @@
+"""Runtime sanitizer: every invariant has a seeded violation that must be
+detected, plus the do-no-harm contract (sanitize mode changes no tokens).
+
+The injection tests corrupt the engine mid-run the way a real bug would —
+a ``free()`` that drops a hold on the floor, a ``finish()`` that loses the
+slot — and assert the sanitizer raises at the next request boundary,
+naming the page/slot. Unit tests then pin each invariant check in
+isolation against hand-built corrupt states.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.sanitize import (SanitizerError, check_allocator,
+                                     check_engine, check_prefix, check_slots)
+from repro.configs import smoke_config
+from repro.models import build_model
+from repro.serving import ContinuousEngine, Request
+from repro.serving.kv_cache import PageAllocator
+from repro.serving.sampling import SamplingParams
+
+
+@pytest.fixture(scope="module")
+def dense():
+    arch = smoke_config("llama3.2-3b")
+    model = build_model(arch)
+    return arch, model, model.init(jax.random.key(0))
+
+
+def _requests(arch, n=4, gen=5, seed=7):
+    rng = np.random.default_rng(seed)
+    shared = list(map(int, rng.integers(5, arch.vocab_size, 9)))
+    reqs = []
+    for i in range(n):
+        prompt = (shared + list(map(int, rng.integers(5, arch.vocab_size, 3)))
+                  if i % 2 == 0 else
+                  list(map(int, rng.integers(
+                      5, arch.vocab_size, int(rng.integers(4, 12))))))
+        sp = SamplingParams() if i % 2 == 0 else SamplingParams(
+            temperature=0.8, top_k=10, seed=50 + i)
+        reqs.append(Request(uid=i, prompt=prompt, max_new_tokens=gen,
+                            sampling=sp))
+    return reqs
+
+
+def _engine(model, params, **kw):
+    kw.setdefault("num_slots", 2)
+    kw.setdefault("num_pages", 24)
+    kw.setdefault("page_size", 4)
+    kw.setdefault("max_seq_len", 48)
+    return ContinuousEngine(model, params, **kw)
+
+
+# ----------------------------------------------------------- do no harm -----
+
+def test_sanitize_clean_run_is_token_identical(dense):
+    arch, model, params = dense
+    reqs = _requests(arch)
+    plain = _engine(model, params).run(_requests(arch))
+    checked = _engine(model, params, sanitize=True).run(reqs)
+    for r in reqs:
+        assert checked[r.uid]["tokens"] == plain[r.uid]["tokens"]
+        assert len(checked[r.uid]["tokens"]) == 5
+
+
+def test_sanitize_env_opt_in(dense, monkeypatch):
+    arch, model, params = dense
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    assert _engine(model, params).sanitize
+    monkeypatch.setenv("REPRO_SANITIZE", "0")
+    assert not _engine(model, params).sanitize
+    # explicit argument beats the environment
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    assert not _engine(model, params, sanitize=False).sanitize
+
+
+# ---------------------------------------------------- injected violations ---
+
+def test_injected_refcount_leak_detected(dense):
+    """A free() that silently drops one hold — the classic leak. The
+    sanitizer must catch it at the next request completion."""
+    arch, model, params = dense
+    eng = _engine(model, params, sanitize=True)
+    allocator = eng.scheduler.allocator
+    orig_free = allocator.free
+    leaked = []
+
+    def leaky_free(pages):
+        if pages and not leaked:
+            leaked.append(pages[0])     # this page's hold is never dropped
+            pages = pages[1:]
+        orig_free(pages)
+
+    allocator.free = leaky_free
+    with pytest.raises(SanitizerError, match="refcount|conservation"):
+        eng.run(_requests(arch))
+    assert leaked
+
+
+def test_injected_slot_desync_detected(dense):
+    """A finish() that forgets to return the slot to the free list — the
+    slot vanishes from both running and free."""
+    arch, model, params = dense
+    eng = _engine(model, params, sanitize=True)
+    sched = eng.scheduler
+    orig_finish = sched.finish
+    broken = []
+
+    def bad_finish(seq):
+        orig_finish(seq)
+        if not broken:
+            broken.append(sched._free_slots.pop())   # lose the slot
+    sched.finish = bad_finish
+    with pytest.raises(SanitizerError, match="neither running nor free"):
+        eng.run(_requests(arch))
+    assert broken
+
+
+def test_injected_nan_params_detected(dense):
+    """NaN weights make NaN logits: the device-side probe must trip on the
+    first final prefill chunk. Without the sanitizer the argmax of NaN
+    logits silently emits token 0 — exactly the failure mode the probe
+    exists for."""
+    arch, model, params = dense
+    nan_params = jax.tree.map(lambda a: (a * jnp.nan).astype(a.dtype)
+                              if jnp.issubdtype(a.dtype, jnp.floating) else a,
+                              params)
+    reqs = _requests(arch, n=2)
+    silent = _engine(model, nan_params).run([
+        Request(uid=r.uid, prompt=r.prompt, max_new_tokens=r.max_new_tokens)
+        for r in reqs])
+    assert all(len(r["tokens"]) > 0 for r in silent.values())  # no error!
+    with pytest.raises(SanitizerError, match="finite"):
+        _engine(model, nan_params, sanitize=True).run(reqs)
+
+
+# ----------------------------------------------------- per-invariant units --
+
+def test_allocator_conservation_leaked_page():
+    a = PageAllocator(8)
+    pages = a.alloc(3)
+    check_allocator(a)
+    del a._refs[pages[1]]               # page now in neither free nor refs
+    with pytest.raises(SanitizerError, match="leak"):
+        check_allocator(a)
+
+
+def test_allocator_conservation_double_tracking():
+    a = PageAllocator(8)
+    pages = a.alloc(2)
+    a._free.append(pages[0])            # free while still refcounted
+    with pytest.raises(SanitizerError, match="both free and refcounted"):
+        check_allocator(a)
+
+
+def test_allocator_conservation_duplicate_free():
+    a = PageAllocator(8)
+    a._free.append(a._free[0])
+    with pytest.raises(SanitizerError, match="duplicate"):
+        check_allocator(a)
+
+
+def test_refcount_accounting_detects_unbacked_ref(dense):
+    arch, model, params = dense
+    eng = _engine(model, params, sanitize=True)
+    res = eng.run(_requests(arch, n=2))
+    assert len(res) == 2
+    check_engine(eng)                   # clean after a full trace
+    page = eng.scheduler.allocator.alloc(1)[0]   # ref'd, no visible holder
+    with pytest.raises(SanitizerError, match="no visible holder"):
+        check_engine(eng)
+    eng.scheduler.allocator.free([page])
+    check_engine(eng)
+
+
+def test_slot_consistency_free_slot_with_pages(dense):
+    arch, model, params = dense
+    eng = _engine(model, params)
+    eng.run(_requests(arch, n=2))
+    slot = eng.scheduler._free_slots[0]
+    eng.scheduler.cache.seq_lens[slot] = 3
+    with pytest.raises(SanitizerError, match="seq_len"):
+        check_slots(eng)
+
+
+def test_slot_consistency_seq_len_drift(dense):
+    """A seq_len that disagrees with the sequence's lifecycle stage — the
+    shape-level desync that silently mis-masks attention."""
+    arch, model, params = dense
+    eng = _engine(model, params)
+    caught = []
+    orig = eng.scheduler.finish
+
+    def tamper(seq):
+        other = [s for s in eng.scheduler.running if s != seq.slot]
+        if not caught and other:
+            eng.scheduler.cache.seq_lens[other[0]] += 2
+            with pytest.raises(SanitizerError, match="seq_len"):
+                check_slots(eng)
+            eng.scheduler.cache.seq_lens[other[0]] -= 2
+            caught.append(other[0])
+        orig(seq)
+
+    eng.scheduler.finish = tamper
+    eng.run(_requests(arch))
+    assert caught
+
+
+def test_prefix_holds_drift_detected(dense):
+    arch, model, params = dense
+    eng = _engine(model, params)
+    eng.run(_requests(arch))
+    prefix = eng.scheduler.prefix
+    assert prefix is not None and prefix._holds, "trace cached nothing"
+    check_prefix(prefix, eng.scheduler.allocator)
+    page = next(iter(prefix._holds))
+    prefix._holds[page] += 1            # incremental map drifts from entries
+    with pytest.raises(SanitizerError, match="drifted"):
+        check_prefix(prefix, eng.scheduler.allocator)
+
+
+def test_prefix_children_drift_detected(dense):
+    arch, model, params = dense
+    eng = _engine(model, params)
+    eng.run(_requests(arch))
+    prefix = eng.scheduler.prefix
+    assert prefix._full, "trace cached no full pages"
+    entry = next(iter(prefix._full.values()))
+    entry.children += 1
+    with pytest.raises(SanitizerError, match="children"):
+        check_prefix(prefix, eng.scheduler.allocator)

@@ -38,6 +38,7 @@ BASELINE = {
         "jamba-v0.1-52b": {"tok_s": 20.0, "prefix_cache": "off: ssm"},
         "deepseek-moe-16b": {"tok_s": 30.0, "prefix_cache": "on"},
     },
+    "recompiles": {"engines": 12, "variants": 40, "traces": 40, "excess": 0},
 }
 
 
@@ -84,6 +85,27 @@ def test_families_regression_and_partial_artifact_fail():
     assert {r["metric"] for r in rows if not r["ok"]} == {
         "families.mamba2-1.3b.tok_s", "families.jamba-v0.1-52b.tok_s",
         "families.deepseek-moe-16b.tok_s"}
+
+
+def test_recompile_excess_gated_at_exactly_zero():
+    """``recompiles.excess`` uses direction "zero": ONE retrace fails the
+    gate no matter how loose the tolerance — a recompile after warmup is a
+    correctness bug, not a perf number tolerance should forgive."""
+    cur = copy.deepcopy(BASELINE)
+    cur["recompiles"]["excess"] = 1
+    rows = cb.compare(cur, BASELINE, tolerance=10.0)
+    assert _failed(rows) == ["recompiles.excess"]
+    assert "not closed" in [r for r in rows
+                            if r["metric"] == "recompiles.excess"][0]["note"]
+
+
+def test_baseline_without_recompiles_section_fails():
+    old = {k: v for k, v in copy.deepcopy(BASELINE).items()
+           if k != "recompiles"}
+    rows = cb.compare(copy.deepcopy(old), old, 0.2)
+    missing = [r for r in rows if not r["ok"]]
+    assert [r["metric"] for r in missing] == ["recompiles.<section>"]
+    assert "re-baseline" in missing[0]["note"]
 
 
 def test_throughput_regression_beyond_tolerance_fails():

@@ -10,6 +10,10 @@ metric:
 - ``shared_prefix.{off,on}.ttft_ms``     (mean TTFT: higher is a regression)
 - ``sampled.{greedy,sampled}.tok_s``
 - ``families.<arch>.tok_s``              (hybrid/SSM/MoE serving sweep)
+- ``recompiles.excess``                  (jit cache misses after warmup:
+                                          must be exactly 0 — a retrace is
+                                          a correctness bug, not a perf
+                                          number, so tolerance never applies)
 
 Every metric present in the *baseline* must exist in the current result —
 a silently missing section (a partial artifact) fails the gate too. Extra
@@ -45,12 +49,13 @@ import os
 import sys
 from typing import Dict, Iterator, List, Optional, Tuple
 
-# (metric path, value, direction); direction "higher" = bigger is better
+# (metric path, value, direction); direction "higher" = bigger is better,
+# "lower" = smaller is better, "zero" = must be exactly 0 (no tolerance)
 Metric = Tuple[str, float, str]
 
 # sections the BASELINE must carry: absence means it predates the coverage
 # (and would silently un-gate it) — regenerate and commit a fresh artifact
-REQUIRED_SECTIONS = ("families",)
+REQUIRED_SECTIONS = ("families", "recompiles")
 
 
 def iter_metrics(baseline: dict) -> Iterator[Metric]:
@@ -71,6 +76,9 @@ def iter_metrics(baseline: dict) -> Iterator[Metric]:
     for arch, d in baseline.get("families", {}).items():
         if "tok_s" in d:
             yield f"families.{arch}.tok_s", d["tok_s"], "higher"
+    if "recompiles" in baseline:
+        yield ("recompiles.excess",
+               baseline["recompiles"].get("excess", 0), "zero")
 
 
 def lookup(result: dict, path: str) -> Optional[float]:
@@ -110,13 +118,18 @@ def compare(current: dict, baseline: dict,
             rows.append({"metric": path, "baseline": base, "current": None,
                          "ok": False, "note": "MISSING from current result"})
             continue
-        if direction == "higher":
+        if direction == "zero":
+            ok = cur == 0
+            note = "closed" if ok else \
+                f"{cur:g} recompile(s) after warmup — jit cache not closed"
+        elif direction == "higher":
             ok = cur >= base * (1.0 - tolerance)
+            note = f"{(cur - base) / base:+.1%}" if base else "+0.0%"
         else:
             ok = cur <= base * (1.0 + tolerance)
-        delta = (cur - base) / base if base else 0.0
+            note = f"{(cur - base) / base:+.1%}" if base else "+0.0%"
         rows.append({"metric": path, "baseline": base, "current": cur,
-                     "ok": ok, "note": f"{delta:+.1%}"})
+                     "ok": ok, "note": note})
     if not rows:
         rows.append({"metric": "<none>", "baseline": None, "current": None,
                      "ok": False, "note": "baseline carries no gated metrics"})

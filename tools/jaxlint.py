@@ -1,0 +1,31 @@
+#!/usr/bin/env python3
+"""jaxlint CLI — JAX/Pallas-aware static analysis for this repo.
+
+Usage:
+    python tools/jaxlint.py src benchmarks tools
+    python tools/jaxlint.py --list-rules
+
+Thin launcher: the implementation lives in ``src/repro/analysis/lint.py``
+and is loaded *by file path* so the lint CI job needs neither a PYTHONPATH
+nor a jax install — ``repro`` is a namespace package and ``lint`` is
+stdlib-only by design. Exit 0 = clean, 1 = findings (printed as
+``path:line:col: [rule] message``).
+"""
+import importlib.util
+import sys
+from pathlib import Path
+
+_LINT = Path(__file__).resolve().parents[1] / "src" / "repro" / "analysis" \
+    / "lint.py"
+
+
+def _load():
+    spec = importlib.util.spec_from_file_location("_jaxlint_impl", _LINT)
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules[spec.name] = mod        # dataclasses resolve via sys.modules
+    spec.loader.exec_module(mod)
+    return mod
+
+
+if __name__ == "__main__":
+    sys.exit(_load().main(sys.argv[1:]))
