@@ -15,10 +15,14 @@ With it on, the shared prompt's K/V pages are computed once and refcounted
 into every request's page table, so prefill tokens computed, time-to-first-
 token, and peak pages-in-use all drop.
 
-The third section prices stochastic decoding: the same trace served greedy
-and with per-request temperature/top-k/top-p (chat-shaped traffic), so the
-on-device sampler's overhead — two [slots, vocab] sorts plus the categorical
-draw per step — shows up as a tok/s delta instead of a guess.
+The third section prices stochastic decoding: the same trace served greedy,
+with per-request temperature/top-k/top-p (chat-shaped traffic) through the
+fused sort-free sampler, and once more through the sort-based reference
+filter — so the sampler's overhead shows up as a tok/s delta instead of a
+guess, the fused kernel's win over the twin-sort epilogue is priced in the
+same table, and any fused-vs-reference token divergence
+(``diverged_streams``, pinned at 0 by the determinism contract) fails the
+``check_bench`` gate.
 
 The ``families`` section serves the non-dense architectures the decode-state
 protocol opened up — pure-SSM mamba2, hybrid jamba, and token-choice
@@ -156,19 +160,33 @@ def run_static(model, params, requests, batch_size):
 
 
 def run_continuous(model, params, requests, slots, *, prefix_cache=False,
-                   tp=1):
+                   tp=1, fused_sampling=None, warmup=None):
     """Serve ``requests`` through one ContinuousEngine sized for the trace.
     Returns (uid -> token_times, full results dict, wall seconds, engine) —
     every section (rates / shared-prefix / sampled / tp) goes through here
     so the pool-sizing math lives in exactly one place. Error results are an
     engine failure (these traces all fit the pool): raise instead of letting
-    the bench summarize a partial run as healthy."""
+    the bench summarize a partial run as healthy.
+
+    ``warmup`` (a list of Requests) is served through the same engine
+    BEFORE the timer starts: sections that price a *delta* between engine
+    configurations (sampled vs greedy) pass a warmup trace hitting every
+    jit variant the timed trace needs, so the delta compares steady-state
+    serving instead of being dominated by one-time trace + XLA-compile
+    cost on a short trace."""
     max_seq = max(len(r.prompt) + r.max_new_tokens for r in requests)
     num_pages = slots * pages_needed(max_seq + 1, PAGE_SIZE) + 2
     engine = ContinuousEngine(model, params, num_slots=slots,
                               num_pages=num_pages, page_size=PAGE_SIZE,
                               max_seq_len=max_seq + PAGE_SIZE,
-                              prefix_cache=prefix_cache, tp=tp)
+                              prefix_cache=prefix_cache, tp=tp,
+                              fused_sampling=fused_sampling)
+    if warmup:
+        wres = engine.run(list(warmup))
+        werrors = {uid: r["error"] for uid, r in wres.items()
+                   if "error" in r}
+        if werrors:
+            raise EngineError(f"warmup returned error results: {werrors}")
     t0 = time.perf_counter()
     results = engine.run(requests)
     wall = time.perf_counter() - t0
@@ -252,34 +270,67 @@ def run_shared_prefix(model, params, n_requests, slots, results):
 
 
 def run_sampled(model, params, n_requests, slots, results):
-    """Same trace served greedy vs sampled (per-request temperature/top-k/
-    top-p, seed = uid): tok/s and inter-token latency for both, the sampler's
-    relative overhead, and how many streams actually diverged from greedy
-    (at these settings nearly all should)."""
+    """Same trace served greedy, sampled (fused filter), and sampled with
+    the sort-based reference filter (per-request temperature/top-k/top-p,
+    seed = uid): tok/s and inter-token latency for each, the fused sampler's
+    relative overhead over greedy, how many streams actually diverged from
+    greedy (at these settings nearly all should), and ``diverged_streams``
+    — fused-vs-reference token mismatches, which the determinism contract
+    pins at exactly 0. Each engine serves a tiny warmup trace before its
+    timed pass (see ``run_continuous``): the overhead percentages price the
+    sampler math per step, not the one-time compile of the sampled jit
+    variants."""
     base = make_trace(n_requests, float("inf"))
     sampled = [Request(uid=r.uid, prompt=r.prompt,
                        max_new_tokens=r.max_new_tokens, arrival=r.arrival,
                        sampling=chat_sampling(r.uid))
                for r in base]
+
+    def warmup_trace(stochastic):
+        # two short requests whose prompts span >1 prefill chunk: together
+        # they hit every jit variant the timed trace uses (chunked +
+        # final-chunk prefill, decode, each with this engine's sampling
+        # settings), so the timed pass below measures steady-state serving
+        rng = np.random.default_rng(4242)
+        prompts = rng.integers(5, 500, (2, 72))
+        return [Request(uid=9000 + i, prompt=[int(t) for t in prompts[i]],
+                        max_new_tokens=6,
+                        sampling=chat_sampling(9000 + i) if stochastic
+                        else SamplingParams())
+                for i in range(2)]
+
     out = {}
     tokens = {}
-    for tag, trace in (("greedy", base), ("sampled", sampled)):
+    for tag, trace, fused in (("greedy", base, None),
+                              ("sampled", sampled, True),
+                              ("sampled_ref", sampled, False)):
         times, res, wall, _ = run_continuous(model, params, trace, slots,
-                                             prefix_cache=True)
+                                             prefix_cache=True,
+                                             fused_sampling=fused,
+                                             warmup=warmup_trace(fused
+                                                                 is not None))
         tokens[tag] = {uid: r["tokens"] for uid, r in res.items()}
         out[tag] = summarize(times, wall)
         emit(f"serve_{tag}_decode", wall * 1e6 / max(1, n_requests),
              f"{out[tag]['tok_s']:.1f}tok/s_p50={out[tag]['p50_ms']:.1f}ms")
     out["sampler_overhead_pct"] = 100.0 * (
         out["greedy"]["tok_s"] / max(out["sampled"]["tok_s"], 1e-9) - 1.0)
+    out["sampler_overhead_pct_ref"] = 100.0 * (
+        out["greedy"]["tok_s"] / max(out["sampled_ref"]["tok_s"], 1e-9) - 1.0)
     out["diverged_requests"] = sum(
         1 for uid in tokens["greedy"]
         if tokens["greedy"][uid] != tokens["sampled"][uid])
+    out["diverged_streams"] = sum(
+        1 for uid in tokens["sampled"]
+        if tokens["sampled"][uid] != tokens["sampled_ref"][uid])
     print(f"[serving] sampled trace ({n_requests} requests, temp=0.8 "
           f"top_k=40 top_p=0.95): greedy {out['greedy']['tok_s']:.1f} tok/s "
-          f"vs sampled {out['sampled']['tok_s']:.1f} tok/s "
-          f"({out['sampler_overhead_pct']:.1f}% sampler overhead), "
-          f"{out['diverged_requests']}/{n_requests} streams diverged")
+          f"vs fused {out['sampled']['tok_s']:.1f} tok/s "
+          f"({out['sampler_overhead_pct']:.1f}% sampler overhead, "
+          f"ref {out['sampler_overhead_pct_ref']:.1f}%), "
+          f"{out['diverged_requests']}/{n_requests} streams diverged from "
+          f"greedy, {out['diverged_streams']}/{n_requests} fused-vs-ref "
+          f"token mismatches (must be 0)")
     results["sampled"] = out
 
 
@@ -373,7 +424,7 @@ def run_tp(model, params, n_requests, slots, tp, results):
 
 def run(arch_name="llama3.2-3b", n_requests=16, slots=4,
         rates=(4.0, 16.0, float("inf")), json_path=None, tp=1,
-        tp_only=False) -> dict:
+        tp_only=False, sampled_only=False) -> dict:
     arch = smoke_config(arch_name)
     model = build_model(arch)
     params = model.init(jax.random.key(0))
@@ -382,7 +433,9 @@ def run(arch_name="llama3.2-3b", n_requests=16, slots=4,
     results = {"arch": arch_name, "n_requests": n_requests, "slots": slots,
                "backend": jax.default_backend(), "rates": {}}
     _ENGINE_STATS.clear()
-    if not tp_only:
+    if sampled_only:
+        run_sampled(model, params, n_requests, slots, results)
+    elif not tp_only:
         run_rates(model, params, n_requests, slots, rates, results)
         run_shared_prefix(model, params, n_requests, slots, results)
         run_sampled(model, params, n_requests, slots, results)
@@ -422,15 +475,22 @@ def main() -> None:
                          "tp=1 itself for the comparison) — the multidevice "
                          "CI job uses this to avoid re-running the "
                          "single-device sections the tier1 job covers")
+    ap.add_argument("--sampled-only", action="store_true",
+                    help="run ONLY the sampled-traffic section (greedy vs "
+                         "fused vs reference filter) — the nightly CI job "
+                         "uses this with a larger trace to watch the "
+                         "sampler tax without re-running the full bench")
     ap.add_argument("--json", default="",
                     help="also write the full results dict to this path")
     args = ap.parse_args()
     if args.tp_only and args.tp <= 1:
         ap.error("--tp-only requires --tp > 1")
+    if args.tp_only and args.sampled_only:
+        ap.error("--tp-only and --sampled-only are mutually exclusive")
     print("name,us_per_call,derived")
     try:
         run(args.arch, args.requests, args.slots, json_path=args.json or None,
-            tp=args.tp, tp_only=args.tp_only)
+            tp=args.tp, tp_only=args.tp_only, sampled_only=args.sampled_only)
     except Exception as e:  # noqa: BLE001 — any engine failure must fail CI
         # no JSON is written on this path: a partial artifact uploaded by CI
         # reads as a healthy run with silently missing sections

@@ -1,7 +1,7 @@
 """Static recompilation auditor for the continuous serving engine.
 
 The engine's jit cache is *lazy per variant* (decode/prefill × sampled ×
-filtered × final): each variant compiles once, on the first traffic that
+filtered × fused × final): each variant compiles once, on the first traffic that
 needs it, and the whole serving design rests on the cache then being
 **closed** — fixed batch shapes, fixed chunk shapes, static flags — so
 steps 2..N of any trace add zero new traces. That closure is also exactly
@@ -178,14 +178,15 @@ def _audit_requests(vocab: int, seed: int = 0) -> List[Request]:
     return reqs
 
 
-def audit_family(family: str, *, tp: int = 1,
+def audit_family(family: str, *, tp: int = 1, fused_sampling: bool = True,
                  requests: Optional[Sequence[Request]] = None) -> AuditReport:
     """Abstract-serve one family's smoke arch and assert cache closure.
 
     The pool is deliberately starved (2 slots, 12 pages) so the trace also
     covers page growth, prefix eviction, CoW tail copies, and forced-replay
     preemption — the paths where a retrace bug would hide behind rare
-    traffic."""
+    traffic. ``fused_sampling=False`` audits the sort-based reference
+    filter's variants (same key arity, ``fused`` element pinned False)."""
     arch_name = FAMILY_ARCHS[family]
     arch = smoke_config(arch_name)
     if tp > 1 and arch.num_kv_heads % tp and tp % arch.num_kv_heads:
@@ -193,7 +194,8 @@ def audit_family(family: str, *, tp: int = 1,
     model = build_model(arch)
     params = model.init(jax.random.key(0))
     engine = AuditEngine(model, params, num_slots=2, num_pages=12,
-                         page_size=4, max_seq_len=40, tp=tp)
+                         page_size=4, max_seq_len=40, tp=tp,
+                         fused_sampling=fused_sampling)
     reqs = list(requests) if requests is not None \
         else _audit_requests(arch.vocab_size)
     results = engine.run(reqs)
@@ -214,15 +216,19 @@ def main() -> int:
         tps.append(2)
     print(f"[recompile-audit] families={list(SERVABLE_FAMILIES)} tps={tps}")
     failed = 0
-    for tp in tps:
-        for family in SERVABLE_FAMILIES:
-            try:
-                report = audit_family(family, tp=tp)
-            except AuditError as e:
-                failed += 1
-                print(f"FAIL {e}")
-            else:
-                print(f"ok   {report.summary()}")
+    # dense also audits the sort-based reference filter (fused off) so BOTH
+    # filtered-variant implementations prove closure, not just the default
+    jobs = [(f, tp, True) for tp in tps for f in SERVABLE_FAMILIES]
+    jobs += [("dense", tp, False) for tp in tps]
+    for family, tp, fused in jobs:
+        try:
+            report = audit_family(family, tp=tp, fused_sampling=fused)
+        except AuditError as e:
+            failed += 1
+            print(f"FAIL {e}")
+        else:
+            tag = "" if fused else " [sampler=ref]"
+            print(f"ok   {report.summary()}{tag}")
     if failed:
         print(f"[recompile-audit] {failed} audit(s) FAILED — the jit cache "
               "is not closed; see signatures above")

@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: single-pass fused top-k + nucleus top-p logit filter.
+
+One row of temperature-scaled logits stays VMEM-resident for the whole
+epilogue: bit-key conversion, the 32-step top-k count bisection, the masked
+softmax mass statistics, and the 32-step nucleus mass bisection all run over
+the same [1, V] block — one HBM read and one HBM write of the logits instead
+of the sort-based sampler's multiple sorted copies. The decision predicates
+are the canonical ones from ``ref.py``, evaluated per row (axis -1), so the
+kernel masks bit-identically to both the jnp streaming path (``ops.py``) and
+the sort-based oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from . import ref
+
+BISECT_STEPS = 32
+TOP_KEY = 0xFFFFFFFE           # see ops.TOP_KEY: keeps uint32 midpoint exact
+
+
+def _filter_kernel(lg_ref, tk_ref, tp_ref, y_ref, *, vocab):
+    lg = lg_ref[...].astype(jnp.float32)                    # [1, V]
+    keys = ref.float_to_key(lg)
+
+    # top-k: bisect the largest key with count(keys >= key) >= k
+    tk = tk_ref[0, 0]
+    k = jnp.where(tk <= 0, vocab, jnp.minimum(tk, vocab))
+
+    def kth_body(_, lohi):
+        lo, hi = lohi
+        mid = lo + ((hi - lo + jnp.uint32(1)) >> 1)
+        cnt = jnp.sum((keys >= mid).astype(jnp.int32), axis=-1)[0]
+        ok = cnt >= k
+        return (jnp.where(ok, mid, lo),
+                jnp.where(ok, hi, mid - jnp.uint32(1)))
+
+    lo, _ = lax.fori_loop(0, BISECT_STEPS, kth_body,
+                          (jnp.uint32(0), jnp.uint32(TOP_KEY)))
+    kth = ref.key_to_float(lo)
+    lg_k = jnp.where(lg < kth, -jnp.inf, lg)
+
+    # top-p: bisect the smallest key whose strictly-greater mass < T
+    m = jnp.max(lg_k, axis=-1)[0]
+    safe_m = jnp.where(jnp.isfinite(m), m, 0.0)
+    u = jnp.exp(lg_k - safe_m)
+    z = jnp.sum(u, axis=-1)[0]
+    t = jnp.maximum(tp_ref[0, 0] * z, jnp.float32(ref.T_FLOOR))
+    keys_k = ref.float_to_key(lg_k)
+
+    def topp_body(_, lohi):
+        lo, hi = lohi
+        mid = lo + ((hi - lo) >> 1)
+        sg = jnp.sum(jnp.where(keys_k > mid, u, 0.0), axis=-1)[0]
+        ok = sg < t
+        return (jnp.where(ok, lo, mid + jnp.uint32(1)),
+                jnp.where(ok, mid, hi))
+
+    _, hi = lax.fori_loop(0, BISECT_STEPS, topp_body,
+                          (jnp.uint32(0), jnp.uint32(TOP_KEY)))
+    th = ref.key_to_float(hi)
+    th = jnp.where(tp_ref[0, 0] >= 1.0, -jnp.inf, th)
+    y_ref[...] = jnp.where(lg_k < th, -jnp.inf, lg_k)
+
+
+def filter_logits(lg: jax.Array, top_k: jax.Array, top_p: jax.Array, *,
+                  interpret: bool = False) -> jax.Array:
+    """lg: [S, V] float32; top_k: int32 [S]; top_p: float32 [S]."""
+    s, v = lg.shape
+    return pl.pallas_call(
+        functools.partial(_filter_kernel, vocab=v),
+        grid=(s,),
+        in_specs=[
+            pl.BlockSpec((1, v), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, v), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, v), jnp.float32),
+        interpret=interpret,
+    )(lg.astype(jnp.float32), top_k.reshape(s, 1), top_p.reshape(s, 1))

@@ -33,7 +33,15 @@ import numpy as np
 
 from ..configs import get_config, smoke_config
 from ..models import build_model
-from ..serving.sampling import SamplingParams, sample_tokens
+from ..serving.sampling import (SamplingParams, fused_sampling_enabled,
+                                sample_tokens)
+
+
+def _fused(args) -> bool:
+    """--sampler beats the REPRO_FUSED_SAMPLING env default."""
+    if args.sampler is not None:
+        return args.sampler == "fused"
+    return fused_sampling_enabled()
 
 
 def _request_seed(args, i: int) -> int:
@@ -67,14 +75,17 @@ def _run_static(model, params, args, arch) -> dict:
     decode = jax.jit(model.decode_step, donate_argnums=(1,))
     if args.temperature > 0:
         filtered = args.top_k > 0 or args.top_p < 1.0
-        sample = jax.jit(sample_tokens, static_argnames=("filtered",))
+        fused = _fused(args) and filtered
+        sample = jax.jit(sample_tokens,
+                         static_argnames=("filtered", "fused"))
         seeds, temps, top_ks, top_ps = _sampling_arrays(args, b)
 
         def pick(logits, pos):
             # the sampler folds each request's stream position into its key,
             # matching the continuous engine draw for draw
             return sample(logits, seeds, jnp.full((b,), pos, jnp.int32),
-                          temps, top_ks, top_ps, filtered=filtered)
+                          temps, top_ks, top_ps, filtered=filtered,
+                          fused=fused)
     else:
         # greedy stays a pure argmax — no sampler sorts/keys on the default
         # path (bit-identical by the sampler's temperature-0 contract, and
@@ -124,7 +135,7 @@ def _run_continuous(model, params, args, arch) -> dict:
                               max_seq_len=max_seq + args.page_size,
                               prefix_cache=args.prefix_cache,
                               prefill_chunk=args.prefill_chunk or None,
-                              tp=args.tp)
+                              tp=args.tp, fused_sampling=_fused(args))
     reqs = [Request(uid=i, prompt=[int(t) for t in prompt[i]],
                     max_new_tokens=glen,
                     sampling=SamplingParams(temperature=args.temperature,
@@ -182,6 +193,12 @@ def main(argv=None) -> dict:
     ap.add_argument("--seed", type=int, default=0,
                     help="base PRNG seed: params init + per-request "
                          "sampling seeds (--seed + request index)")
+    ap.add_argument("--sampler", choices=("fused", "ref"), default=None,
+                    help="top-k/top-p filter implementation: the sort-free "
+                         "streaming kernel (default) or the sort-based "
+                         "reference. Token streams are bit-identical; 'ref' "
+                         "is a fallback/debugging path (default from "
+                         "REPRO_FUSED_SAMPLING, unset = fused)")
     # continuous-engine knobs
     ap.add_argument("--tp", type=int, default=1,
                     help="tensor-parallel degree over a 1-D device mesh "

@@ -84,7 +84,7 @@ from ..models.model import Model
 from ..models.moe import capacity_per_row
 from ..parallel import sharding as shardlib
 from .kv_cache import pages_needed
-from .sampling import sample_tokens
+from .sampling import fused_sampling_enabled, sample_tokens
 from .scheduler import Request, Scheduler, SequenceState
 
 SERVABLE_FAMILIES = ("dense", "moe", "vlm", "ssm", "hybrid")
@@ -160,7 +160,8 @@ class ContinuousEngine:
                  num_pages: int = 256, page_size: int = 16,
                  max_seq_len: int = 512, prefix_cache: bool = True,
                  prefill_chunk: Optional[int] = None, tp: int = 1,
-                 mesh=None, sanitize: Optional[bool] = None):
+                 mesh=None, sanitize: Optional[bool] = None,
+                 fused_sampling: Optional[bool] = None):
         arch = model.arch
         assert arch.family in SERVABLE_FAMILIES, \
             (f"continuous engine serves families {SERVABLE_FAMILIES}; "
@@ -193,6 +194,13 @@ class ContinuousEngine:
         # retrace of this one.
         self.sanitize = sanitize_enabled() if sanitize is None \
             else bool(sanitize)
+        # sort-free streaming top-k/top-p filter (repro.kernels.
+        # fused_sampling) vs the sort-based reference — bit-identical token
+        # streams either way; the flag is a fallback + parity-test hook.
+        # Static per engine like `sanitize`: it names the filter
+        # implementation inside the compiled filtered variants.
+        self.fused_sampling = fused_sampling_enabled() if fused_sampling \
+            is None else bool(fused_sampling)
         # prefix caching shares *pages*; a mamba mixer's recurrent state is
         # not page-decomposable (a cached KV page is useless without the SSM
         # state at its boundary), so SSM-bearing archs gate it off — loudly:
@@ -286,14 +294,21 @@ class ContinuousEngine:
         self._jit_cache: Dict[Tuple, Any] = {}
         # the compiled all-greedy decode variant never reads the sampling
         # arrays; ship these cached placeholders instead of rebuilding and
-        # re-transferring five [S] arrays every step of the default path
+        # re-transferring [S] arrays every step of the default path
         self._null_sampling = (
             jnp.zeros((num_slots,), jnp.uint32),    # seeds
-            jnp.zeros((num_slots,), jnp.int32),     # positions
             jnp.zeros((num_slots,), jnp.float32),   # temperatures
             jnp.zeros((num_slots,), jnp.int32),     # top_k
             jnp.ones((num_slots,), jnp.float32),    # top_p
         )
+        # sampled traffic reuses its per-slot sampling arrays too: they only
+        # change when a slot is (re)assigned, so the decode loop rebuilds
+        # them on composition change instead of paying four host->device
+        # transfers per step (positions are derived on device from seq_lens
+        # — see _decode_impl). This host tax, not the filter math, was most
+        # of the sampled-vs-greedy throughput gap.
+        self._sampling_key: Optional[Tuple] = None
+        self._sampling_args = self._null_sampling
 
     # ------------------------------------------------------------ jit builders --
     def _build(self, impl, in_specs, out_specs, donate, key=()):
@@ -308,13 +323,16 @@ class ContinuousEngine:
                        donate_argnums=donate if self._donate_pools else ())
 
     def _decode_fn(self, sampled: bool, filtered: bool):
-        key = ("decode", sampled, filtered)
+        # `fused` names the filter implementation, so it only exists in
+        # variants that filter at all — greedy/temperature-only variants
+        # stay shared between fused and reference engines
+        fused = self.fused_sampling and filtered
+        key = ("decode", sampled, filtered, fused)
         if key not in self._jit_cache:
             impl = functools.partial(self._decode_impl, sampled=sampled,
-                                     filtered=filtered)
+                                     filtered=filtered, fused=fused)
             in_specs = (self._param_specs, self._pool_specs, P(None, None),
-                        P(None), P(None), P(None), P(None), P(None), P(None),
-                        P(None))
+                        P(None), P(None), P(None), P(None), P(None), P(None))
             out_specs = (P(None), self._pool_specs)
             if self.sanitize:
                 out_specs += (P(),)     # the replicated isfinite probe
@@ -323,10 +341,12 @@ class ContinuousEngine:
         return self._jit_cache[key]
 
     def _prefill_fn(self, final: bool, sampled: bool, filtered: bool):
-        key = ("prefill", final, sampled, filtered)
+        fused = self.fused_sampling and filtered
+        key = ("prefill", final, sampled, filtered, fused)
         if key not in self._jit_cache:
             impl = functools.partial(self._prefill_impl, final=final,
-                                     sampled=sampled, filtered=filtered)
+                                     sampled=sampled, filtered=filtered,
+                                     fused=fused)
             in_specs = (self._param_specs, self._pool_specs, P(None, None),
                         P(None), P(), P(), P(), P(), P(), P(), P(), P())
             out_specs = (P(), self._pool_specs)
@@ -358,18 +378,19 @@ class ContinuousEngine:
 
     # ------------------------------------------------------------- jitted fns ---
     def _decode_impl(self, params, pools, page_table, seq_lens, tokens,
-                     seeds, positions, temps, top_ks, top_ps, *, sampled,
-                     filtered):
+                     seeds, temps, top_ks, top_ps, *, sampled, filtered,
+                     fused):
         """tokens [S] -> (next token [S], new pools). S == num_slots.
 
         Selection stays on device — greedy slots take a raw argmax, sampled
         slots a per-slot (seed, position)-keyed categorical draw — so only
         the [S] token vector ever crosses to the host, never [S, vocab]
-        logits. ``sampled``/``filtered`` are static: an all-greedy step
-        compiles to a pure argmax (today's default traffic pays zero sampler
-        work — no [S, vocab] sorts, no key fold-ins), temperature-only
-        batches skip the two filter sorts, and each extra variant compiles
-        only once the matching traffic shows up."""
+        logits. ``sampled``/``filtered``/``fused`` are static: an all-greedy
+        step compiles to a pure argmax (today's default traffic pays zero
+        sampler work — no filtering, no key fold-ins), temperature-only
+        batches skip the filtering epilogue, filtered batches run either the
+        streaming fused filter or the sort-based reference, and each extra
+        variant compiles only once the matching traffic shows up."""
         x = self.model._embed(params, tokens[:, None])
         x, pools = tf.paged_decode_stack(self.arch, params["blocks"], pools,
                                          x, page_table, seq_lens,
@@ -378,8 +399,16 @@ class ContinuousEngine:
         if not sampled:
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         else:
+            # stream position of the token this step emits, derived ON
+            # DEVICE: every earlier token of the sequence is cached except
+            # the step's input token, so position = seq_lens + 1. Slot- and
+            # batch-independent (the determinism contract), and it spares
+            # sampled steps any per-step position transfer. Mid-prefill
+            # slots are masked to seq_lens 0 and temperature 0; their draws
+            # are discarded on the host.
+            positions = seq_lens + 1
             tok = sample_tokens(logits, seeds, positions, temps, top_ks,
-                                top_ps, filtered=filtered)
+                                top_ps, filtered=filtered, fused=fused)
         if self.sanitize:
             # inactive slots read the null page and may legitimately produce
             # junk — probe only rows with at least one real token resident
@@ -389,7 +418,7 @@ class ContinuousEngine:
 
     def _prefill_impl(self, params, pools, tokens, page_row, slot, start,
                       total, moe_cap, seed, temp, top_k, top_p, *, final,
-                      sampled, filtered):
+                      sampled, filtered, fused):
         """One prompt chunk of one sequence. tokens [1, C] (padded past
         ``total - start`` valid tokens) -> (token after the chunk's last
         valid token [scalar], new pools). One compiled shape (variants on
@@ -420,7 +449,8 @@ class ContinuousEngine:
             tok = jnp.argmax(logits[0], axis=-1).astype(jnp.int32)
         else:
             tok = sample_tokens(logits, seed[None], total[None], temp[None],
-                                top_k[None], top_p[None], filtered=filtered)[0]
+                                top_k[None], top_p[None], filtered=filtered,
+                                fused=fused)[0]
         if self.sanitize:
             return tok, pools, jnp.isfinite(logits).all()
         return tok, pools
@@ -638,25 +668,27 @@ class ContinuousEngine:
             # exact no-ops, so variant choice never changes a draw)
             filtered = any(not sp.greedy and sp.filtered for sp in active)
             if sampled:
-                seeds = np.zeros((self.num_slots,), np.uint32)
-                positions = np.zeros((self.num_slots,), np.int32)
-                temps = np.zeros((self.num_slots,), np.float32)
-                top_ks = np.zeros((self.num_slots,), np.int32)
-                top_ps = np.ones((self.num_slots,), np.float32)
-                for slot in slots:
-                    seq = sched.running[slot]
-                    sp = seq.request.sampling
-                    seeds[slot] = sp.seed
-                    # stream position of the token this step emits — slot-
-                    # and batch-independent, so co-scheduling never changes
-                    # a draw
-                    positions[slot] = len(seq.request.prompt) \
-                        + len(seq.generated)
-                    temps[slot] = sp.temperature
-                    top_ks[slot] = sp.top_k
-                    top_ps[slot] = sp.top_p
-                sampling_args = tuple(jnp.asarray(a) for a in (
-                    seeds, positions, temps, top_ks, top_ps))
+                # per-slot sampling params are constant while a request
+                # occupies its slot; only rebuild + re-transfer the arrays
+                # when the decoding composition changes (admission, finish,
+                # preemption) — positions come from seq_lens on device
+                comp = tuple((s, sched.running[s].request.sampling)
+                             for s in slots)
+                if comp != self._sampling_key:
+                    seeds = np.zeros((self.num_slots,), np.uint32)
+                    temps = np.zeros((self.num_slots,), np.float32)
+                    top_ks = np.zeros((self.num_slots,), np.int32)
+                    top_ps = np.ones((self.num_slots,), np.float32)
+                    for slot in slots:
+                        sp = sched.running[slot].request.sampling
+                        seeds[slot] = sp.seed
+                        temps[slot] = sp.temperature
+                        top_ks[slot] = sp.top_k
+                        top_ps[slot] = sp.top_p
+                    self._sampling_args = tuple(jnp.asarray(a) for a in (
+                        seeds, temps, top_ks, top_ps))
+                    self._sampling_key = comp
+                sampling_args = self._sampling_args
             else:
                 sampling_args = self._null_sampling
             out = self._decode_fn(sampled, filtered)(

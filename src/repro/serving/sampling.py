@@ -26,13 +26,31 @@ Filtering order follows the common serving convention: temperature scaling,
 then top-k, then top-p (nucleus) on the rescaled distribution, then one
 categorical draw. ``temperature == 0`` short-circuits to raw ``argmax`` on
 the unscaled logits — bit-identical to the historical greedy path.
+
+The top-k/top-p masking itself lives in ``repro.kernels.fused_sampling``:
+``fused=True`` (the default) streams it sort-free (Pallas on TPU, a bit-key
+bisection in jnp elsewhere), ``fused=False`` runs the single sort-based
+reference. The two are bit-identical by construction — they share one
+decision predicate — so the flag changes speed, never tokens.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.fused_sampling import ops as fused_ops
+from repro.kernels.fused_sampling import ref as fused_ref
+
+
+def fused_sampling_enabled() -> bool:
+    """Env default for the engines' ``fused_sampling`` flag: set
+    ``REPRO_FUSED_SAMPLING=0`` to fall back to the sort-based reference
+    filter everywhere. A debugging escape hatch — the two implementations
+    draw bit-identical tokens, so the toggle only changes step latency."""
+    return os.environ.get("REPRO_FUSED_SAMPLING", "1") not in ("", "0")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,13 +88,15 @@ class SamplingParams:
     @property
     def filtered(self) -> bool:
         """True when top-k or top-p actually constrains the distribution —
-        the engines skip the sampler's [B, V] sorts entirely otherwise."""
+        the engines skip the sampler's filtering epilogue entirely
+        otherwise."""
         return self.top_k > 0 or self.top_p < 1.0
 
 
 def sample_tokens(logits: jax.Array, seeds: jax.Array, positions: jax.Array,
                   temperatures: jax.Array, top_k: jax.Array,
-                  top_p: jax.Array, *, filtered: bool = True) -> jax.Array:
+                  top_p: jax.Array, *, filtered: bool = True,
+                  fused: bool = True) -> jax.Array:
     """Draw one token per row of ``logits`` [B, V] -> int32 [B].
 
     All parameter arrays are per-row [B]: ``seeds`` uint32, ``positions``
@@ -86,43 +106,25 @@ def sample_tokens(logits: jax.Array, seeds: jax.Array, positions: jax.Array,
     bit-identical to the greedy path — and their PRNG work is discarded.
 
     ``filtered`` is a static (Python) flag: pass False when every row has
-    top_k and top_p disabled to skip the two [B, V] sorts (top-k threshold,
-    nucleus cutoff) entirely — for finite logits the disabled filters are
-    exact no-ops, so both variants draw the identical token for the same
-    (seed, position, logits). Traceable/jittable either way; nothing bigger
-    than the [B] token vector ever crosses to the host.
+    top_k and top_p disabled to skip the filtering epilogue entirely — for
+    finite logits the disabled filters are exact no-ops, so both variants
+    draw the identical token for the same (seed, position, logits).
+
+    ``fused`` (static) picks the filter implementation: the sort-free
+    streaming kernel package (default) or the sort-based reference oracle.
+    Bit-identical outputs either way; the flag exists for fallback and for
+    divergence regression tests. Traceable/jittable in every combination;
+    nothing bigger than the [B] token vector ever crosses to the host.
     """
     greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
-    vocab = logits.shape[-1]
     temps = temperatures.astype(jnp.float32)
     safe_t = jnp.where(temps > 0, temps, 1.0)
     lg = logits.astype(jnp.float32) / safe_t[:, None]
 
     if filtered:
-        # top-k: mask everything below the kth-largest rescaled logit
-        k = jnp.where(top_k <= 0, vocab, jnp.minimum(top_k, vocab))
-        kth = jnp.take_along_axis(jnp.sort(lg, axis=-1),
-                                  (vocab - k)[:, None], axis=-1)
-        lg = jnp.where(lg < kth, -jnp.inf, lg)
-
-        # top-p: keep the smallest descending-prob prefix reaching top_p.
-        # A disabled row (top_p >= 1) keeps everything EXPLICITLY: float32
-        # cumsum can reach 1.0 before the last token, and `cum - probs < 1`
-        # alone would then mask real tail tokens only in this variant,
-        # making the draw depend on which co-batched neighbour forced the
-        # filtered path
-        desc = jnp.sort(lg, axis=-1)[:, ::-1]
-        probs = jax.nn.softmax(desc, axis=-1)
-        cum = jnp.cumsum(probs, axis=-1)
-        tp = top_p.astype(jnp.float32)[:, None]
-        keep = ((cum - probs) < tp) | (tp >= 1.0)
-        # last kept rank; the clamp keeps an out-of-contract top_p <= 0
-        # (callers validate via SamplingParams) at "top-1" instead of
-        # wrapping -1 to the weakest logit and silently disabling the filter
-        cutoff = jnp.maximum(jnp.sum(keep, axis=-1) - 1, 0)
-        thresh = jnp.take_along_axis(desc, cutoff[:, None], axis=-1)
-        lg = jnp.where(lg < thresh, -jnp.inf, lg)
+        fn = fused_ops.filter_logits if fused else fused_ref.filter_logits_ref
+        lg = fn(lg, top_k.astype(jnp.int32), top_p.astype(jnp.float32))
 
     keys = jax.vmap(
         lambda s, p: jax.random.fold_in(jax.random.key(s), p)

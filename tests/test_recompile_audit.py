@@ -42,8 +42,23 @@ def test_dense_cache_closed_and_fully_exercised():
     # engine can build: both prefill finalities, all decode sampling
     # variants, and the CoW tail copy
     assert kinds == {"decode", "prefill", "copy"}
-    assert ("prefill", False, False, False) in report.variants, \
+    assert ("prefill", False, False, False, False) in report.variants, \
         "non-final prefill chunk variant never exercised"
+    # the filtered variants name their filter implementation (fused by
+    # default); unfiltered variants pin the fused element False so they stay
+    # shared between fused and reference engines
+    assert ("decode", True, True, True) in report.variants
+    assert ("prefill", True, True, True, True) in report.variants
+    assert all(len(sigs) == 1 for sigs in report.signatures.values())
+
+
+def test_dense_reference_sampler_cache_closed():
+    """fused_sampling=False audits the sort-based reference filter: same
+    variant census, with the fused element of the filtered keys False."""
+    report = audit_family("dense", fused_sampling=False)
+    assert ("decode", True, True, False) in report.variants
+    assert ("prefill", True, True, True, False) in report.variants
+    assert ("decode", True, True, True) not in report.variants
     assert all(len(sigs) == 1 for sigs in report.signatures.values())
 
 
@@ -86,9 +101,9 @@ def test_planted_shape_retrace_is_detected():
         report.check()
     # and the census pinpoints the culprit: the final-prefill variant holds
     # two distinct signatures, decode still one
-    final_prefill = engine.signatures[("prefill", True, False, False)]
+    final_prefill = engine.signatures[("prefill", True, False, False, False)]
     assert len(final_prefill) == 2
-    assert len(engine.signatures[("decode", False, False)]) == 1
+    assert len(engine.signatures[("decode", False, False, False)]) == 1
 
 
 def test_empty_trace_is_an_audit_failure():

@@ -296,6 +296,34 @@ def test_replay_exact_preemption_mid_decode(fp32_llama):
                      prefix_cache=False, seed=41)
 
 
+def test_replay_parity_fused_vs_reference_sampler(fp32_llama):
+    """The filter implementation (fused bisection kernel vs sort-based
+    reference) and a forced mid-decode preemption are BOTH token-invisible:
+    an unpreempted fused-sampler run and a preempted+replayed
+    reference-sampler run of the same requests emit identical streams."""
+    arch, model, params = fp32_llama
+    rng = np.random.default_rng(53)
+    prompts, gens, sps = _mixed_requests(arch, rng, share_prefix=True)
+    gens = [max(g, 6) for g in gens]
+    kw = dict(num_slots=4, num_pages=48, page_size=8, max_seq_len=64,
+              prefix_cache=False)
+    reqs = [Request(uid=i, prompt=prompts[i], max_new_tokens=gens[i],
+                    sampling=sps[i]) for i in range(len(prompts))]
+    _, fused_clean = _run_engine(model, params, prompts, gens, sps,
+                                 fused_sampling=True, **kw)
+    engine, fired = _forced_preempt_engine(
+        model, params, uid=1, when=lambda seq: len(seq.generated) >= 2,
+        fused_sampling=False, **kw)
+    res = engine.run(reqs)
+    assert fired == [1], "forced preemption must actually fire"
+    ref_forced = [res[i]["tokens"] for i in range(len(prompts))]
+    assert ref_forced == fused_clean, \
+        "reference-sampler replay diverged from the fused engine"
+    # the reference engine really traced the ref filter variant
+    assert ("decode", True, True, False) in engine._jit_cache
+    assert ("decode", True, True, True) not in engine._jit_cache
+
+
 def test_replay_exact_preemption_mid_prefill(fp32_llama):
     """The preemption lands while the victim is still chunk-prefilling its
     prompt (prefilled < prefill_target): nothing was emitted yet, the whole

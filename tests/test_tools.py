@@ -32,7 +32,11 @@ BASELINE = {
         "off": {"tok_s": 60.0, "ttft_ms": 1000.0},
         "on": {"tok_s": 80.0, "ttft_ms": 700.0},
     },
-    "sampled": {"greedy": {"tok_s": 150.0}, "sampled": {"tok_s": 90.0}},
+    "sampled": {"greedy": {"tok_s": 150.0}, "sampled": {"tok_s": 120.0},
+                "sampled_ref": {"tok_s": 90.0},
+                "sampler_overhead_pct": 25.0,
+                "sampler_overhead_pct_ref": 66.7,
+                "diverged_requests": 8, "diverged_streams": 0},
     "families": {
         "mamba2-1.3b": {"tok_s": 40.0, "prefix_cache": "off: ssm"},
         "jamba-v0.1-52b": {"tok_s": 20.0, "prefix_cache": "off: ssm"},
@@ -56,9 +60,14 @@ def test_metric_inventory_matches_baseline_sections():
     assert "rates.inf.continuous.tok_s" in paths
     assert "shared_prefix.on.ttft_ms" in paths
     assert "sampled.sampled.tok_s" in paths
+    assert "sampled.sampled_ref.tok_s" in paths
+    assert "sampled.sampler_overhead_pct" in paths
+    assert "sampled.diverged_streams" in paths
     assert "families.jamba-v0.1-52b.tok_s" in paths
-    # static engine numbers are context, not gated
+    # static engine numbers are context, not gated; the reference sampler's
+    # overhead is context too (only its absolute tok/s is gated)
     assert not any("static" in p for p in paths)
+    assert "sampled.sampler_overhead_pct_ref" not in paths
 
 
 def test_baseline_without_families_section_fails():
@@ -95,8 +104,8 @@ def test_recompile_excess_gated_at_exactly_zero():
     cur["recompiles"]["excess"] = 1
     rows = cb.compare(cur, BASELINE, tolerance=10.0)
     assert _failed(rows) == ["recompiles.excess"]
-    assert "not closed" in [r for r in rows
-                            if r["metric"] == "recompiles.excess"][0]["note"]
+    assert "correctness invariant" in \
+        [r for r in rows if r["metric"] == "recompiles.excess"][0]["note"]
 
 
 def test_baseline_without_recompiles_section_fails():
@@ -106,6 +115,44 @@ def test_baseline_without_recompiles_section_fails():
     missing = [r for r in rows if not r["ok"]]
     assert [r["metric"] for r in missing] == ["recompiles.<section>"]
     assert "re-baseline" in missing[0]["note"]
+
+
+def test_baseline_without_sampled_section_fails():
+    """`sampled` became REQUIRED with the fused-sampler gates: a baseline
+    predating them would silently drop the sampler-overhead and
+    fused-vs-reference divergence coverage."""
+    old = {k: v for k, v in copy.deepcopy(BASELINE).items()
+           if k != "sampled"}
+    rows = cb.compare(copy.deepcopy(old), old, 0.2)
+    missing = [r for r in rows if not r["ok"]]
+    assert [r["metric"] for r in missing] == ["sampled.<section>"]
+
+
+def test_sampler_overhead_gated_in_absolute_points():
+    """``sampler_overhead_pct`` uses direction "lower_points": the current
+    overhead may exceed the baseline by at most 100 * tolerance percentage
+    points. A relative bound would flap once the baseline is a small
+    percentage (25% * 1.2 = 30% leaves 5 points of room; 25 + 20 = 45
+    points is the intended slack)."""
+    cur = copy.deepcopy(BASELINE)
+    cur["sampled"]["sampler_overhead_pct"] = 44.0      # +19pp < 20pp slack
+    assert _failed(cb.compare(cur, BASELINE, 0.2)) == []
+    cur["sampled"]["sampler_overhead_pct"] = 46.0      # +21pp > 20pp slack
+    assert _failed(cb.compare(cur, BASELINE, 0.2)) == \
+        ["sampled.sampler_overhead_pct"]
+    # an improvement always passes
+    cur["sampled"]["sampler_overhead_pct"] = 1.0
+    assert _failed(cb.compare(cur, BASELINE, 0.2)) == []
+
+
+def test_fused_divergence_gated_at_exactly_zero():
+    """One fused-vs-reference token mismatch fails the gate at any
+    tolerance: the two filter implementations are bit-identical by
+    contract, so divergence is a sampler bug, not noise."""
+    cur = copy.deepcopy(BASELINE)
+    cur["sampled"]["diverged_streams"] = 1
+    rows = cb.compare(cur, BASELINE, tolerance=10.0)
+    assert _failed(rows) == ["sampled.diverged_streams"]
 
 
 def test_throughput_regression_beyond_tolerance_fails():
@@ -138,7 +185,9 @@ def test_partial_artifact_fails_not_skips():
     rows = cb.compare(cur, BASELINE, 0.2)
     missing = [r for r in rows if not r["ok"]]
     assert {r["metric"] for r in missing} == \
-        {"sampled.greedy.tok_s", "sampled.sampled.tok_s"}
+        {"sampled.greedy.tok_s", "sampled.sampled.tok_s",
+         "sampled.sampled_ref.tok_s", "sampled.sampler_overhead_pct",
+         "sampled.diverged_streams"}
     assert all("MISSING" in r["note"] for r in missing)
 
 

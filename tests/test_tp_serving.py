@@ -115,6 +115,48 @@ print("TP_PARITY_OK")
     assert "TP_PARITY_OK" in out
 
 
+def test_tp2_fused_vs_reference_sampler_parity():
+    """The fused filter kernel and the sort-based reference must emit
+    bit-identical sampled streams at tp=2 (logits are replicated post-psum,
+    so the filter sees the same rows on every shard): fused tp=2 == ref
+    tp=2 == fused tp=1."""
+    out = _run_subprocess(r"""
+import dataclasses
+import jax, numpy as np
+from repro.configs import smoke_config
+from repro.models import build_model
+from repro.serving import ContinuousEngine, Request
+from repro.serving.sampling import SamplingParams
+
+arch = dataclasses.replace(smoke_config("llama3.2-3b"), num_kv_heads=4,
+                           dtype="float32", param_dtype="float32")
+model = build_model(arch)
+params = model.init(jax.random.key(0))
+rng = np.random.default_rng(61)
+prompts = [list(map(int, rng.integers(5, arch.vocab_size,
+                                      int(rng.integers(4, 12)))))
+           for _ in range(4)]
+gens = [int(rng.integers(4, 9)) for _ in range(4)]
+sps = [SamplingParams(temperature=0.9, top_k=16 if i % 2 else 0,
+                      top_p=0.85, seed=500 + i) for i in range(4)]
+reqs = [Request(uid=i, prompt=prompts[i], max_new_tokens=gens[i],
+                sampling=sps[i]) for i in range(4)]
+
+def serve(tp, fused):
+    eng = ContinuousEngine(model, params, num_slots=4, num_pages=64,
+                           page_size=8, max_seq_len=64, tp=tp,
+                           fused_sampling=fused)
+    res = eng.run(list(reqs))
+    return [res[i]["tokens"] for i in range(4)]
+
+ref = serve(1, True)
+assert serve(2, True) == ref, "fused tp=2 diverged from fused tp=1"
+assert serve(2, False) == ref, "reference sampler tp=2 diverged"
+print("TP2_SAMPLER_PARITY_OK")
+""")
+    assert "TP2_SAMPLER_PARITY_OK" in out
+
+
 # --------------------------------------------------------- validation (1 dev) ---
 
 def test_tp_rejects_indivisible_head_counts():

@@ -8,7 +8,17 @@ metric:
 - ``rates.<rate>.continuous.tok_s``      (throughput: lower is a regression)
 - ``shared_prefix.{off,on}.tok_s``
 - ``shared_prefix.{off,on}.ttft_ms``     (mean TTFT: higher is a regression)
-- ``sampled.{greedy,sampled}.tok_s``
+- ``sampled.{greedy,sampled,sampled_ref}.tok_s``
+- ``sampled.sampler_overhead_pct``       (fused sampler tax over greedy, in
+                                          percentage points: current may
+                                          exceed baseline by at most
+                                          100 * tolerance points — a
+                                          relative gate on a near-zero
+                                          percentage would flap on noise)
+- ``sampled.diverged_streams``           (fused vs reference filter token
+                                          mismatches: must be exactly 0 —
+                                          divergence is a determinism bug,
+                                          not a perf number)
 - ``families.<arch>.tok_s``              (hybrid/SSM/MoE serving sweep)
 - ``recompiles.excess``                  (jit cache misses after warmup:
                                           must be exactly 0 — a retrace is
@@ -50,12 +60,14 @@ import sys
 from typing import Dict, Iterator, List, Optional, Tuple
 
 # (metric path, value, direction); direction "higher" = bigger is better,
-# "lower" = smaller is better, "zero" = must be exactly 0 (no tolerance)
+# "lower" = smaller is better, "zero" = must be exactly 0 (no tolerance),
+# "lower_points" = a percentage gated in absolute points
+# (cur <= base + 100 * tolerance)
 Metric = Tuple[str, float, str]
 
 # sections the BASELINE must carry: absence means it predates the coverage
 # (and would silently un-gate it) — regenerate and commit a fresh artifact
-REQUIRED_SECTIONS = ("families", "recompiles")
+REQUIRED_SECTIONS = ("families", "recompiles", "sampled")
 
 
 def iter_metrics(baseline: dict) -> Iterator[Metric]:
@@ -69,10 +81,17 @@ def iter_metrics(baseline: dict) -> Iterator[Metric]:
         if d:
             yield f"shared_prefix.{tag}.tok_s", d["tok_s"], "higher"
             yield f"shared_prefix.{tag}.ttft_ms", d["ttft_ms"], "lower"
-    for tag in ("greedy", "sampled"):
+    for tag in ("greedy", "sampled", "sampled_ref"):
         d = baseline.get("sampled", {}).get(tag)
         if d:
             yield f"sampled.{tag}.tok_s", d["tok_s"], "higher"
+    sampled = baseline.get("sampled", {})
+    if "sampler_overhead_pct" in sampled:
+        yield ("sampled.sampler_overhead_pct",
+               sampled["sampler_overhead_pct"], "lower_points")
+    if "diverged_streams" in sampled:
+        yield ("sampled.diverged_streams",
+               sampled["diverged_streams"], "zero")
     for arch, d in baseline.get("families", {}).items():
         if "tok_s" in d:
             yield f"families.{arch}.tok_s", d["tok_s"], "higher"
@@ -120,8 +139,14 @@ def compare(current: dict, baseline: dict,
             continue
         if direction == "zero":
             ok = cur == 0
-            note = "closed" if ok else \
-                f"{cur:g} recompile(s) after warmup — jit cache not closed"
+            note = "zero, as required" if ok else \
+                f"{cur:g} != 0 — a correctness invariant broke, not a " \
+                "perf number"
+        elif direction == "lower_points":
+            # percentage metric, gated in absolute points: a relative bound
+            # on a near-zero base would reject harmless noise
+            ok = cur <= base + 100.0 * tolerance
+            note = f"{cur - base:+.1f}pp"
         elif direction == "higher":
             ok = cur >= base * (1.0 - tolerance)
             note = f"{(cur - base) / base:+.1%}" if base else "+0.0%"
