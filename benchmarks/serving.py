@@ -31,6 +31,13 @@ tok/s, latency, and the per-family prefix-cache gate (forced off, with the
 recorded reason, for SSM-bearing archs). ``tools/check_bench.py`` requires
 this section in the baseline.
 
+The ``multistep`` section prices the multi-step compiled decode loop: the
+same mixed greedy/sampled trace served at ``decode_steps`` N in {1, 4, 16}.
+It records tok/s, host dispatches per decode token (hard-bounded in-bench at
+``< 1.1/N`` — a deterministic count), the host-sync reduction factor, and
+``diverged_streams`` vs N=1 (the determinism contract pins it at 0).
+``tools/check_bench.py`` requires this section too.
+
 With ``--tp N`` (N > 1; needs N devices — on CPU set
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N``) a fourth section
 serves the same trace through the tensor-parallel engine: tok/s vs tp=1, the
@@ -160,7 +167,8 @@ def run_static(model, params, requests, batch_size):
 
 
 def run_continuous(model, params, requests, slots, *, prefix_cache=False,
-                   tp=1, fused_sampling=None, warmup=None):
+                   tp=1, fused_sampling=None, warmup=None, decode_steps=1,
+                   spare_pages=0):
     """Serve ``requests`` through one ContinuousEngine sized for the trace.
     Returns (uid -> token_times, full results dict, wall seconds, engine) —
     every section (rates / shared-prefix / sampled / tp) goes through here
@@ -175,12 +183,13 @@ def run_continuous(model, params, requests, slots, *, prefix_cache=False,
     serving instead of being dominated by one-time trace + XLA-compile
     cost on a short trace."""
     max_seq = max(len(r.prompt) + r.max_new_tokens for r in requests)
-    num_pages = slots * pages_needed(max_seq + 1, PAGE_SIZE) + 2
+    num_pages = slots * pages_needed(max_seq + 1, PAGE_SIZE) + 2 + spare_pages
     engine = ContinuousEngine(model, params, num_slots=slots,
                               num_pages=num_pages, page_size=PAGE_SIZE,
                               max_seq_len=max_seq + PAGE_SIZE,
                               prefix_cache=prefix_cache, tp=tp,
-                              fused_sampling=fused_sampling)
+                              fused_sampling=fused_sampling,
+                              decode_steps=decode_steps)
     if warmup:
         wres = engine.run(list(warmup))
         werrors = {uid: r["error"] for uid, r in wres.items()
@@ -372,6 +381,98 @@ def run_families(n_requests, slots, results):
     results["families"] = out
 
 
+def run_multistep(model, params, n_requests, slots, results):
+    """Multi-step compiled decode section: the same mixed greedy/sampled
+    trace served at ``decode_steps`` N in {1, 4, 16}. N > 1 moves N decode
+    iterations into one on-device ``lax.while_loop`` per host dispatch, so
+    the section prices exactly what the tentpole claims: host dispatches per
+    decode-emitted token must fall ~Nx (hard bound ``< 1.1 / N``, enforced
+    here — it is a deterministic count, not a timing), throughput must not
+    regress (``speedup_vs_n1``, gated relatively by check_bench), and token
+    streams must stay bit-identical to N=1 (``diverged_streams``, pinned at
+    0). Each engine serves a mixed warmup trace first so the timed pass
+    compares steady-state serving, not one-time trace+compile cost.
+
+    The trace is decode-heavy (generation lengths 32..64, several horizons
+    each): the loop's early exit is GLOBAL, so a request within N tokens of
+    its budget truncates the whole dispatch — on traffic shorter than the
+    horizon the 1.1/N bound is unattainable by design, and picking N above
+    the typical remaining budget buys nothing (docs/SERVING.md covers the
+    tuning trade-off)."""
+    base = make_trace(n_requests, float("inf"), gen_range=(32, 64))
+    trace = [Request(uid=r.uid, prompt=r.prompt,
+                     max_new_tokens=r.max_new_tokens, arrival=r.arrival,
+                     sampling=chat_sampling(r.uid)
+                     if r.uid % 2 else SamplingParams())
+             for r in base]
+
+    def warmup_trace():
+        # one greedy + one sampled request spanning >1 prefill chunk: hits
+        # the chunked/final prefill and both decode variants the timed
+        # mixed trace needs, at this engine's horizon
+        rng = np.random.default_rng(777)
+        prompts = rng.integers(5, 500, (2, 72))
+        return [Request(uid=9100 + i, prompt=[int(t) for t in prompts[i]],
+                        max_new_tokens=6,
+                        sampling=chat_sampling(9100 + i) if i
+                        else SamplingParams())
+                for i in range(2)]
+
+    out = {}
+    tokens = {}
+    for n in (1, 4, 16):
+        # prefix cache OFF + two spare pages per slot: the horizon
+        # pre-allocator only takes FREE pages beyond its preemption reserve
+        # and never evicts, so retained prompt pages (these random prompts
+        # share nothing — the cache buys zero hits here) or a trace-exact
+        # pool would truncate dispatches on page-budget exits instead of
+        # letting them run their horizon
+        times, res, wall, engine = run_continuous(
+            model, params, trace, slots, prefix_cache=False, decode_steps=n,
+            warmup=warmup_trace(), spare_pages=2 * slots)
+        tokens[n] = {uid: r["tokens"] for uid, r in res.items()}
+        # each request's FIRST token comes from its final prefill chunk;
+        # everything after is emitted by decode dispatches
+        decode_tokens = sum(len(t) for t in tokens[n].values()) - len(trace)
+        dpt = engine.decode_dispatches / max(decode_tokens, 1)
+        if n > 1 and dpt >= 1.1 / n:
+            raise EngineError(
+                f"decode_steps={n}: {engine.decode_dispatches} dispatches "
+                f"for {decode_tokens} decode tokens = {dpt:.4f} "
+                f"dispatches/token, above the 1.1/N={1.1 / n:.4f} bound — "
+                "the loop is exiting early every dispatch")
+        out[f"n{n}"] = {
+            **summarize(times, wall),
+            "decode_dispatches": engine.decode_dispatches,
+            "decode_steps": engine.steps,
+            "decode_tokens": decode_tokens,
+            "dispatches_per_token": dpt,
+            "exits": dict(engine.decode_exits),
+        }
+        emit(f"serve_multistep_n{n}", wall * 1e6 / max(1, n_requests),
+             f"{out[f'n{n}']['tok_s']:.1f}tok/s_"
+             f"{dpt:.3f}dispatch/tok")
+    d1 = out["n1"]["decode_dispatches"]
+    for n in (4, 16):
+        out[f"n{n}"]["host_sync_reduction"] = d1 / max(
+            out[f"n{n}"]["decode_dispatches"], 1)
+        out[f"n{n}"]["speedup_vs_n1"] = (
+            out[f"n{n}"]["tok_s"] / max(out["n1"]["tok_s"], 1e-9))
+    out["diverged_streams"] = sum(
+        1 for n in (4, 16) for uid in tokens[1]
+        if tokens[1][uid] != tokens[n][uid])
+    print(f"[serving] multistep trace ({n_requests} requests, mixed "
+          f"greedy/sampled): "
+          + ", ".join(
+              f"N={n} {out[f'n{n}']['tok_s']:.1f} tok/s "
+              f"({out[f'n{n}']['dispatches_per_token']:.3f} dispatch/tok)"
+              for n in (1, 4, 16))
+          + f"; host syncs cut {out['n4']['host_sync_reduction']:.1f}x at "
+            f"N=4 / {out['n16']['host_sync_reduction']:.1f}x at N=16, "
+            f"{out['diverged_streams']} diverged streams (must be 0)")
+    results["multistep"] = out
+
+
 def run_tp(model, params, n_requests, slots, tp, results):
     """Tensor-parallel section: the same mixed greedy/sampled trace served
     at tp=1 and tp=N. Streams must not diverge (head-sharded TP is an
@@ -424,7 +525,7 @@ def run_tp(model, params, n_requests, slots, tp, results):
 
 def run(arch_name="llama3.2-3b", n_requests=16, slots=4,
         rates=(4.0, 16.0, float("inf")), json_path=None, tp=1,
-        tp_only=False, sampled_only=False) -> dict:
+        tp_only=False, sampled_only=False, multistep_only=False) -> dict:
     arch = smoke_config(arch_name)
     model = build_model(arch)
     params = model.init(jax.random.key(0))
@@ -435,11 +536,14 @@ def run(arch_name="llama3.2-3b", n_requests=16, slots=4,
     _ENGINE_STATS.clear()
     if sampled_only:
         run_sampled(model, params, n_requests, slots, results)
+    elif multistep_only:
+        run_multistep(model, params, n_requests, slots, results)
     elif not tp_only:
         run_rates(model, params, n_requests, slots, rates, results)
         run_shared_prefix(model, params, n_requests, slots, results)
         run_sampled(model, params, n_requests, slots, results)
         run_families(n_requests, slots, results)
+        run_multistep(model, params, n_requests, slots, results)
     if tp > 1:
         run_tp(model, params, n_requests, slots, tp, results)
     # jit-cache closure census across every engine the run built: ``excess``
@@ -480,17 +584,24 @@ def main() -> None:
                          "fused vs reference filter) — the nightly CI job "
                          "uses this with a larger trace to watch the "
                          "sampler tax without re-running the full bench")
+    ap.add_argument("--multistep-only", action="store_true",
+                    help="run ONLY the multi-step compiled decode section "
+                         "(decode_steps N in {1,4,16}) — the nightly CI job "
+                         "uses this with a larger trace to watch host-sync "
+                         "reduction without re-running the full bench")
     ap.add_argument("--json", default="",
                     help="also write the full results dict to this path")
     args = ap.parse_args()
     if args.tp_only and args.tp <= 1:
         ap.error("--tp-only requires --tp > 1")
-    if args.tp_only and args.sampled_only:
-        ap.error("--tp-only and --sampled-only are mutually exclusive")
+    if sum((args.tp_only, args.sampled_only, args.multistep_only)) > 1:
+        ap.error("--tp-only/--sampled-only/--multistep-only are mutually "
+                 "exclusive")
     print("name,us_per_call,derived")
     try:
         run(args.arch, args.requests, args.slots, json_path=args.json or None,
-            tp=args.tp, tp_only=args.tp_only, sampled_only=args.sampled_only)
+            tp=args.tp, tp_only=args.tp_only, sampled_only=args.sampled_only,
+            multistep_only=args.multistep_only)
     except Exception as e:  # noqa: BLE001 — any engine failure must fail CI
         # no JSON is written on this path: a partial artifact uploaded by CI
         # reads as a healthy run with silently missing sections

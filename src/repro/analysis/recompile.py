@@ -20,11 +20,22 @@ asserts every exercised variant saw exactly ONE signature. A planted
 retrace — e.g. mutating the chunk size mid-trace — fails loudly
 (``tests/test_recompile_audit.py`` seeds exactly that).
 
-Coverage: every servable family × engine step variant × tp. tp > 1 audits
-shard-map the abstract step over a real device mesh, so they need
+Coverage matrix (``python -m repro.analysis.recompile`` runs all of it; the
+tests pin representative cells):
+
+    every servable family   × tp ∈ {1, ..devices}  × fused sampler × N=1
+    dense                   × tp ∈ {1, ..devices}  × ref sampler   × N=1
+    every servable family   × tp=1                 × fused sampler × N=4
+    dense                   × tp ∈ {2, ..devices}  × fused sampler × N=4
+
+The N=4 rows audit the multi-step compiled decode loop: its decode keys
+gain the horizon element (``("decode", sampled, filtered, fused, N)``) and
+the per-dispatch predicate arrays (active mask, budgets, page capacity,
+EOS ids) must not perturb the traced signature. tp > 1 audits shard-map
+the abstract step over a real device mesh, so they need
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (the tests run them
-in a subprocess; ``python -m repro.analysis.recompile`` audits every tp
-the visible device count supports).
+in a subprocess; the CLI audits every tp the visible device count
+supports).
 """
 from __future__ import annotations
 
@@ -179,6 +190,7 @@ def _audit_requests(vocab: int, seed: int = 0) -> List[Request]:
 
 
 def audit_family(family: str, *, tp: int = 1, fused_sampling: bool = True,
+                 decode_steps: int = 1,
                  requests: Optional[Sequence[Request]] = None) -> AuditReport:
     """Abstract-serve one family's smoke arch and assert cache closure.
 
@@ -186,7 +198,10 @@ def audit_family(family: str, *, tp: int = 1, fused_sampling: bool = True,
     covers page growth, prefix eviction, CoW tail copies, and forced-replay
     preemption — the paths where a retrace bug would hide behind rare
     traffic. ``fused_sampling=False`` audits the sort-based reference
-    filter's variants (same key arity, ``fused`` element pinned False)."""
+    filter's variants (same key arity, ``fused`` element pinned False).
+    ``decode_steps > 1`` audits the multi-step compiled decode loop's
+    variants instead (decode keys gain the horizon element; the per-dispatch
+    predicate arrays must not perturb the traced signature)."""
     arch_name = FAMILY_ARCHS[family]
     arch = smoke_config(arch_name)
     if tp > 1 and arch.num_kv_heads % tp and tp % arch.num_kv_heads:
@@ -195,7 +210,8 @@ def audit_family(family: str, *, tp: int = 1, fused_sampling: bool = True,
     params = model.init(jax.random.key(0))
     engine = AuditEngine(model, params, num_slots=2, num_pages=12,
                          page_size=4, max_seq_len=40, tp=tp,
-                         fused_sampling=fused_sampling)
+                         fused_sampling=fused_sampling,
+                         decode_steps=decode_steps)
     reqs = list(requests) if requests is not None \
         else _audit_requests(arch.vocab_size)
     results = engine.run(reqs)
@@ -217,17 +233,24 @@ def main() -> int:
     print(f"[recompile-audit] families={list(SERVABLE_FAMILIES)} tps={tps}")
     failed = 0
     # dense also audits the sort-based reference filter (fused off) so BOTH
-    # filtered-variant implementations prove closure, not just the default
-    jobs = [(f, tp, True) for tp in tps for f in SERVABLE_FAMILIES]
-    jobs += [("dense", tp, False) for tp in tps]
-    for family, tp, fused in jobs:
+    # filtered-variant implementations prove closure, not just the default;
+    # every family re-audits at decode_steps=4 so the multi-step compiled
+    # decode loop's horizon-keyed variants prove closure too (dense also at
+    # every tp the mesh supports)
+    jobs = [(f, tp, True, 1) for tp in tps for f in SERVABLE_FAMILIES]
+    jobs += [("dense", tp, False, 1) for tp in tps]
+    jobs += [(f, 1, True, 4) for f in SERVABLE_FAMILIES]
+    jobs += [("dense", tp, True, 4) for tp in tps if tp > 1]
+    for family, tp, fused, steps in jobs:
         try:
-            report = audit_family(family, tp=tp, fused_sampling=fused)
+            report = audit_family(family, tp=tp, fused_sampling=fused,
+                                  decode_steps=steps)
         except AuditError as e:
             failed += 1
             print(f"FAIL {e}")
         else:
             tag = "" if fused else " [sampler=ref]"
+            tag += f" [decode_steps={steps}]" if steps > 1 else ""
             print(f"ok   {report.summary()}{tag}")
     if failed:
         print(f"[recompile-audit] {failed} audit(s) FAILED — the jit cache "

@@ -7,7 +7,10 @@ continuous  ``repro.serving.ContinuousEngine``: paged KV cache + scheduler —
             requests are admitted/recycled mid-flight, prompts are ingested
             by chunked prefill, shared prompt prefixes are served from the
             refcounted prefix cache (``--no-prefix-cache`` to disable), and
-            live KV memory tracks actual generated lengths. Serves every
+            live KV memory tracks actual generated lengths. ``--decode-steps
+            N`` moves N decode iterations into one compiled on-device loop
+            per host dispatch (token streams stay bit-identical to N=1).
+            Serves every
             decode-state-protocol family — dense, MoE, VLM, pure-SSM
             (mamba2), hybrid (jamba) — with prefix caching auto-gated off
             for SSM-bearing archs (recurrent state is not page-decomposable;
@@ -135,7 +138,8 @@ def _run_continuous(model, params, args, arch) -> dict:
                               max_seq_len=max_seq + args.page_size,
                               prefix_cache=args.prefix_cache,
                               prefill_chunk=args.prefill_chunk or None,
-                              tp=args.tp, fused_sampling=_fused(args))
+                              tp=args.tp, fused_sampling=_fused(args),
+                              decode_steps=args.decode_steps)
     reqs = [Request(uid=i, prompt=[int(t) for t in prompt[i]],
                     max_new_tokens=glen,
                     sampling=SamplingParams(temperature=args.temperature,
@@ -157,9 +161,16 @@ def _run_continuous(model, params, args, arch) -> dict:
           f"{out[:2, :8].tolist()}")
     stats = {"tokens": out, "wall": wall, "steps": engine.steps,
              "prefills": engine.prefills,
+             "decode_dispatches": engine.decode_dispatches,
+             "decode_exits": dict(engine.decode_exits),
              "prefill_tokens": engine.prefill_tokens,
              "cached_prefill_tokens": engine.cached_prefill_tokens,
              "prefix_cache_off_reason": engine.prefix_cache_off_reason}
+    if args.decode_steps > 1:
+        print(f"[serve/continuous] decode-steps={args.decode_steps}: "
+              f"{engine.decode_dispatches} host dispatches for "
+              f"{engine.steps} decode steps "
+              f"(exits: {dict(engine.decode_exits)})")
     if engine.prefix_cache_off_reason:
         print(f"[serve/continuous] {engine.prefix_cache_off_reason}")
     if args.tp > 1:
@@ -221,6 +232,12 @@ def main(argv=None) -> dict:
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="chunked-prefill tokens per step, a page multiple "
                          "(default: 4 pages)")
+    ap.add_argument("--decode-steps", type=int, default=1,
+                    help="decode iterations per host dispatch: N > 1 runs a "
+                         "compiled on-device loop that early-exits on "
+                         "EOS/budget/page exhaustion, cutting host syncs by "
+                         "~N while keeping token streams bit-identical "
+                         "(continuous engine only)")
     args = ap.parse_args(argv)
     # one validation for BOTH engines (the static path reads raw args, so
     # without this it would silently reinterpret e.g. --top-p 0)
@@ -234,6 +251,11 @@ def main(argv=None) -> dict:
                  "(greedy argmax); set --temperature > 0 to sample")
     if args.tp > 1 and args.engine != "continuous":
         ap.error("--tp requires --engine continuous")
+    if args.decode_steps < 1:
+        ap.error("--decode-steps must be >= 1")
+    if args.decode_steps > 1 and args.engine != "continuous":
+        ap.error("--decode-steps requires --engine continuous (the static "
+                 "driver decodes in lock-step, one token per dispatch)")
 
     arch = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     assert not arch.bidirectional, "encoder-only archs have no decode step"

@@ -335,6 +335,99 @@ def paged_decode_stack(arch: ArchConfig, stacked: PyTree, caches: PyTree,
     return x, new_caches
 
 
+# ---- multi-step compiled decode -------------------------------------------
+# Per-slot exit-reason bits returned by `paged_decode_loop`. A dispatch that
+# ran the full horizon with no bit set exited on the N-step horizon alone.
+EXIT_EOS = 1        # slot emitted its request's eos token
+EXIT_BUDGET = 2     # slot emitted its last allowed token (max-new / context)
+EXIT_PAGES = 4      # slot's next K/V write would fall past its allocated pages
+
+
+def paged_decode_loop(arch: ArchConfig, stacked: PyTree, caches: PyTree,
+                      tokens: jax.Array, page_table: jax.Array,
+                      seq_lens: jax.Array, active: jax.Array,
+                      budget: jax.Array, page_limit: jax.Array,
+                      eos_ids: jax.Array, *, horizon: int, embed, unembed,
+                      select, probe: bool = False,
+                      tp_axis: Optional[str] = None):
+    """Up to ``horizon`` decode iterations in one on-device ``lax.while_loop``.
+
+    The loop body is exactly one single-step decode (``paged_decode_stack``
+    + LM head + the caller's token selection) with the carry advanced the
+    way the host would have between dispatches: ``seq_lens`` increments for
+    active slots each iteration, and the sampling position handed to
+    ``select`` is the carried ``seq_lens + 1`` — so the (seed, position)
+    PRNG key of every draw matches the single-step engine bit-for-bit at
+    any horizon, including across forced-replay preemption.
+
+    Carry: ``(i, tokens, seq_lens, caches, emitted buffer [horizon, S],
+    exit-reason bits [S], finite-probe ok)``. The loop exits as soon as ANY
+    slot records an exit event, so events can only be set on the final
+    executed iteration and every one of the ``i`` returned iterations is
+    valid for every active slot — the host appends exactly ``i`` tokens per
+    slot and never sees a token past a slot's EOS.
+
+    Exit predicates (the in-loop restatement of the host scheduler's
+    per-token decisions):
+
+    - ``EXIT_EOS``:    the token just emitted equals the slot's ``eos_ids``
+                       entry (-1 for requests without one — never matches).
+    - ``EXIT_BUDGET``: the slot emitted its last allowed token
+                       (``budget[s]`` = host-computed remaining max-new /
+                       context-capacity allowance).
+    - ``EXIT_PAGES``:  checked *before* an iteration — an active slot's
+                       next K/V write position (= its carried ``seq_lens``)
+                       would land past ``page_limit[s]`` (allocated pages ×
+                       page size). Computed again after the loop so the
+                       host sees which slot needs a page, not just that the
+                       loop stopped.
+
+    Returns ``(buf [horizon, S], steps, reasons [S], caches[, ok])`` with
+    ``steps >= 1`` (the host guarantees iteration 0's predicates hold).
+    ``embed``/``unembed`` are the model's token embedding / LM head;
+    ``select(logits [S, V], positions [S]) -> int32 [S]`` picks tokens
+    (argmax or the fused-sampling epilogue) from the in-carry positions.
+    Inactive slots (mid-prefill or empty, masked to the null page) never
+    advance ``seq_lens``, never set exit bits, and their junk draws are
+    discarded by the host.
+    """
+    n_slots = tokens.shape[0]
+
+    def _cond(carry):
+        i, _tok, lens, _caches, _buf, reasons, _ok = carry
+        blocked = active & (lens >= page_limit)
+        return (i < horizon) & jnp.all(reasons == 0) & ~jnp.any(blocked)
+
+    def _body(carry):
+        i, tok, lens, caches, buf, reasons, ok = carry
+        x = embed(tok[:, None])
+        x, caches = paged_decode_stack(arch, stacked, caches, x, page_table,
+                                       lens, tp_axis=tp_axis)
+        logits = unembed(x)
+        new = select(logits, lens + 1)
+        buf = buf.at[i].set(new)
+        reasons = reasons \
+            | jnp.where(active & (new == eos_ids), EXIT_EOS, 0) \
+            | jnp.where(active & (i + 1 >= budget), EXIT_BUDGET, 0)
+        lens = lens + active.astype(lens.dtype)
+        if probe:
+            # inactive slots read the null page and may legitimately
+            # produce junk — probe only the live rows
+            ok = ok & jnp.all(jnp.isfinite(logits) | ~active[:, None])
+        return (i + 1, new, lens, caches, buf, reasons, ok)
+
+    carry = (jnp.zeros((), jnp.int32), tokens, seq_lens, caches,
+             jnp.zeros((horizon, n_slots), jnp.int32),
+             jnp.zeros((n_slots,), jnp.int32), jnp.asarray(True))
+    steps, _tok, lens, caches, buf, reasons, ok = jax.lax.while_loop(
+        _cond, _body, carry)
+    reasons = reasons | jnp.where(active & (lens >= page_limit),
+                                  EXIT_PAGES, 0)
+    if probe:
+        return buf, steps, reasons, caches, ok
+    return buf, steps, reasons, caches
+
+
 def paged_prefill_period(arch: ArchConfig, p: PyTree, cache: PyTree,
                          x: jax.Array, page_row: jax.Array, start: jax.Array,
                          total_len: jax.Array, slot: jax.Array,

@@ -64,6 +64,30 @@ prompt + generated tokens are re-prefilled as forced context, so the resumed
 stream is token-identical under any sampling setting (the invariant
 ``tests/test_sampling.py`` pins, including mid-prefill and CoW-tail
 preemptions).
+
+Multi-step compiled decode (``decode_steps = N > 1``) moves N decode
+iterations into one on-device ``lax.while_loop`` per host dispatch
+(``models.transformer.paged_decode_loop``): the loop carries the sampled
+token, per-slot sequence lengths (positions — and therefore PRNG keys —
+advance *in-carry*, which is what keeps streams bit-identical to N=1), the
+emitted-token buffer, and an exit-reason vector, and exits *globally* the
+first iteration any active slot hits EOS, its token budget, or its
+pre-allocated page capacity — so every returned token is valid and the
+host appends exactly ``k`` tokens per active slot. The host resyncs once
+per dispatch: it pre-computes the per-slot predicates (budget left, page
+capacity via ``Scheduler.extend_capacity`` — free pages only, never a
+preemption), then reconciles the returned ``(buffer, k, reasons)`` through
+the ordinary finish/admit/preempt path. Invariants the tests pin:
+
+- jit-cache key: ``("decode", sampled, filtered, fused)`` at N=1 (the
+  single-step path is literally unchanged) and
+  ``("decode", sampled, filtered, fused, N)`` at N>1 — prefill keys never
+  carry the horizon. ``analysis/recompile.py`` audits both shapes closed.
+- ``steps`` counts loop iterations, ``decode_dispatches`` host dispatches,
+  ``decode_exits`` why each dispatch returned; at N=1 the two counters are
+  equal and no exit accounting runs.
+- a preemption can only land *between* dispatches; forced replay re-derives
+  every key from stream position, so the horizon is token-invisible.
 """
 from __future__ import annotations
 
@@ -161,7 +185,8 @@ class ContinuousEngine:
                  max_seq_len: int = 512, prefix_cache: bool = True,
                  prefill_chunk: Optional[int] = None, tp: int = 1,
                  mesh=None, sanitize: Optional[bool] = None,
-                 fused_sampling: Optional[bool] = None):
+                 fused_sampling: Optional[bool] = None,
+                 decode_steps: int = 1):
         arch = model.arch
         assert arch.family in SERVABLE_FAMILIES, \
             (f"continuous engine serves families {SERVABLE_FAMILIES}; "
@@ -201,6 +226,15 @@ class ContinuousEngine:
         # implementation inside the compiled filtered variants.
         self.fused_sampling = fused_sampling_enabled() if fused_sampling \
             is None else bool(fused_sampling)
+        # multi-step compiled decode: decode_steps > 1 dispatches up to N
+        # iterations as one on-device lax.while_loop (tf.paged_decode_loop)
+        # and resyncs with the host only on an exit event (EOS, token/page
+        # budget) or the horizon. Static per engine — the horizon is part of
+        # the decode variant's jit-cache key, so changing N means a new
+        # variant, never a retrace. Token streams are bit-identical across N
+        # (positions advance in-carry exactly as the host would have).
+        assert decode_steps >= 1, decode_steps
+        self.decode_steps = int(decode_steps)
         # prefix caching shares *pages*; a mamba mixer's recurrent state is
         # not page-decomposable (a cached KV page is useless without the SSM
         # state at its boundary), so SSM-bearing archs gate it off — loudly:
@@ -279,6 +313,11 @@ class ContinuousEngine:
         self.params = params
 
         self.steps = 0                  # decode steps executed (for stats)
+        self.decode_dispatches = 0      # host round-trips those steps cost
+        # why multi-step dispatches came back to the host (per active slot
+        # bit for eos/budgets; one count per full-horizon dispatch)
+        self.decode_exits = {"eos": 0, "token_budget": 0, "page_budget": 0,
+                             "horizon": 0}
         self.prefills = 0               # prefill completions (== admissions)
         self.prefill_tokens = 0         # prompt tokens actually computed
         self.cached_prefill_tokens = 0  # prompt tokens served from the cache
@@ -334,6 +373,26 @@ class ContinuousEngine:
             in_specs = (self._param_specs, self._pool_specs, P(None, None),
                         P(None), P(None), P(None), P(None), P(None), P(None))
             out_specs = (P(None), self._pool_specs)
+            if self.sanitize:
+                out_specs += (P(),)     # the replicated isfinite probe
+            self._jit_cache[key] = self._build(
+                impl, in_specs, out_specs, donate=(1,), key=key)
+        return self._jit_cache[key]
+
+    def _decode_multi_fn(self, sampled: bool, filtered: bool):
+        """The multi-step decode variant: same static flags as
+        ``_decode_fn`` plus the horizon N, which keys the jit cache — an
+        engine at ``decode_steps=N`` compiles (lazily, per sampling
+        variant) loops of exactly that horizon and nothing else."""
+        fused = self.fused_sampling and filtered
+        key = ("decode", sampled, filtered, fused, self.decode_steps)
+        if key not in self._jit_cache:
+            impl = functools.partial(self._decode_multi_impl, sampled=sampled,
+                                     filtered=filtered, fused=fused,
+                                     horizon=self.decode_steps)
+            in_specs = (self._param_specs, self._pool_specs, P(None, None)) \
+                + (P(None),) * 10
+            out_specs = (P(None, None), P(), P(None), self._pool_specs)
             if self.sanitize:
                 out_specs += (P(),)     # the replicated isfinite probe
             self._jit_cache[key] = self._build(
@@ -415,6 +474,40 @@ class ContinuousEngine:
             live = jnp.isfinite(logits) | (seq_lens[:, None] == 0)
             return tok, pools, live.all()
         return tok, pools
+
+    def _decode_multi_impl(self, params, pools, page_table, seq_lens, tokens,
+                           active, budget, page_limit, eos_ids, seeds, temps,
+                           top_ks, top_ps, *, sampled, filtered, fused,
+                           horizon):
+        """tokens [S] -> (emitted tokens [horizon, S], steps executed,
+        exit-reason bits [S], new pools). One ``lax.while_loop`` around the
+        exact single-step body (``tf.paged_decode_loop``): up to ``horizon``
+        tokens per slot leave the device per host round-trip instead of one.
+
+        ``active``/``budget``/``page_limit``/``eos_ids`` are the host's
+        per-slot loop predicates (decode-eligible mask, remaining token
+        allowance, allocated-page capacity in tokens, eos id or -1); the
+        sampling arrays are the same per-slot params the single-step variant
+        takes, with positions advanced in-carry so every draw's (seed,
+        position) key — and therefore every token — matches ``decode_steps=1``
+        bit-for-bit."""
+        def embed(tok):
+            return self.model._embed(params, tok)
+
+        def unembed(x):
+            return self.model._logits(params, x)[:, 0]
+
+        def select(logits, positions):
+            if not sampled:
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return sample_tokens(logits, seeds, positions, temps, top_ks,
+                                 top_ps, filtered=filtered, fused=fused)
+
+        return tf.paged_decode_loop(
+            self.arch, params["blocks"], pools, tokens, page_table, seq_lens,
+            active, budget, page_limit, eos_ids, horizon=horizon, embed=embed,
+            unembed=unembed, select=select, probe=self.sanitize,
+            tp_axis=self.tp_axis)
 
     def _prefill_impl(self, params, pools, tokens, page_row, slot, start,
                       total, moe_cap, seed, temp, top_k, top_p, *, final,
@@ -650,6 +743,32 @@ class ContinuousEngine:
             if not slots:
                 continue
             cache = sched.cache
+            horizon = self.decode_steps
+            if horizon > 1:
+                # per-slot loop predicates for the multi-step dispatch,
+                # built BEFORE snapshotting the page table: extend_capacity
+                # appends best-effort horizon pages the compiled loop must
+                # see. budget is the host scheduler's remaining allowance
+                # (max-new and page-table capacity), restated as the
+                # in-loop EXIT_BUDGET predicate; >= 1 because done
+                # sequences were finished above.
+                h_active = np.zeros((self.num_slots,), bool)
+                h_budget = np.ones((self.num_slots,), np.int32)
+                h_pages = np.zeros((self.num_slots,), np.int32)
+                h_eos = np.full((self.num_slots,), -1, np.int32)
+                for slot in slots:
+                    seq = sched.running[slot]
+                    req = seq.request
+                    h_active[slot] = True
+                    left = min(
+                        req.max_new_tokens - len(seq.generated),
+                        seq.max_context - len(req.prompt)
+                        - len(seq.generated))
+                    h_budget[slot] = left
+                    h_pages[slot] = sched.extend_capacity(
+                        slot, min(horizon, left))
+                    if req.eos_id is not None:
+                        h_eos[slot] = req.eos_id
             page_table, seq_lens = cache.page_table, cache.seq_lens
             if len(slots) != len(sched.running):
                 page_table = page_table.copy()
@@ -691,27 +810,83 @@ class ContinuousEngine:
                 sampling_args = self._sampling_args
             else:
                 sampling_args = self._null_sampling
-            out = self._decode_fn(sampled, filtered)(
+            if horizon == 1:
+                out = self._decode_fn(sampled, filtered)(
+                    self.params, self.pools, jnp.asarray(page_table),
+                    jnp.asarray(seq_lens), jnp.asarray(tokens),
+                    *sampling_args)
+                if self.sanitize:
+                    next_tokens, self.pools, probe = out
+                    check_finite_probe(probe, f"decode step {self.steps}")
+                else:
+                    next_tokens, self.pools = out
+                self.steps += 1
+                self.decode_dispatches += 1
+                self.collective_bytes += \
+                    self._tp_collective_bytes(self.num_slots)
+                # jaxlint: allow[hot-host-sync] THE per-step sync:
+                # continuous batching is host-driven — stop checks and slot
+                # reuse need this step's tokens before the next batch can
+                # be scheduled
+                next_np = np.asarray(next_tokens)
+                t_tok = now()
+                for slot in slots:
+                    seq = sched.running[slot]
+                    cache.seq_lens[slot] += 1    # input token now cached
+                    seq.generated.append(int(next_np[slot]))
+                    seq.token_times.append(t_tok)
+                    if seq.done:
+                        finish(seq)
+                continue
+
+            # multi-step dispatch: up to `horizon` decode iterations run as
+            # one compiled while_loop; the host resyncs once per dispatch
+            # and replays the loop's effects (seq_lens advance, emitted
+            # tokens, finish events) from the returned exit state
+            out = self._decode_multi_fn(sampled, filtered)(
                 self.params, self.pools, jnp.asarray(page_table),
                 jnp.asarray(seq_lens), jnp.asarray(tokens),
-                *sampling_args)
+                jnp.asarray(h_active), jnp.asarray(h_budget),
+                jnp.asarray(h_pages), jnp.asarray(h_eos), *sampling_args)
             if self.sanitize:
-                next_tokens, self.pools, probe = out
-                check_finite_probe(probe, f"decode step {self.steps}")
+                buf, n_steps, reasons, self.pools, probe = out
+                check_finite_probe(
+                    probe, f"multi-step decode dispatch "
+                           f"{self.decode_dispatches} (horizon {horizon})")
             else:
-                next_tokens, self.pools = out
-            self.steps += 1
-            self.collective_bytes += self._tp_collective_bytes(self.num_slots)
-            # jaxlint: allow[hot-host-sync] THE per-step sync: continuous
-            # batching is host-driven — stop checks and slot reuse need
-            # this step's tokens before the next batch can be scheduled
-            next_np = np.asarray(next_tokens)
+                buf, n_steps, reasons, self.pools = out
+            # THE per-horizon sync — the one intentional host round-trip
+            # every `horizon` decode steps: the scheduler must replay the
+            # loop's exit state (steps executed, tokens emitted, per-slot
+            # exit reasons) before it can admit, preempt, or allocate
+            # pages. max(1, ...) is for the recompile auditor's recorder,
+            # which replays all-zero outputs; the real loop always executes
+            # >= 1 iteration because the host guaranteed iteration 0's
+            # predicates (ensure_capacity allocated the next page and done
+            # sequences never reach the dispatch).
+            # jaxlint: allow[hot-host-sync] the designed per-horizon sync
+            k = max(1, int(n_steps))
+            # jaxlint: allow[hot-host-sync] same designed per-horizon sync
+            buf_np = np.asarray(buf)
+            # jaxlint: allow[hot-host-sync] same designed per-horizon sync
+            reasons_np = np.asarray(reasons)
+            self.steps += k
+            self.decode_dispatches += 1
+            self.collective_bytes += \
+                k * self._tp_collective_bytes(self.num_slots)
+            for name, bit in (("eos", tf.EXIT_EOS),
+                              ("token_budget", tf.EXIT_BUDGET),
+                              ("page_budget", tf.EXIT_PAGES)):
+                self.decode_exits[name] += \
+                    int(((reasons_np[slots] & bit) != 0).sum())
+            if k == horizon and not reasons_np[slots].any():
+                self.decode_exits["horizon"] += 1
             t_tok = now()
             for slot in slots:
                 seq = sched.running[slot]
-                cache.seq_lens[slot] += 1        # input token now cached
-                seq.generated.append(int(next_np[slot]))
-                seq.token_times.append(t_tok)
+                cache.seq_lens[slot] += k        # k input tokens now cached
+                seq.generated.extend(int(t) for t in buf_np[:k, slot])
+                seq.token_times.extend([t_tok] * k)
                 if seq.done:
                     finish(seq)
         return results

@@ -22,6 +22,13 @@ and the next token it samples uses the same ``(seed, position)`` key the
 uninterrupted run would have used, so resumed sequences are token-identical
 under any sampling setting.
 
+The same property makes the multi-step compiled decode loop
+(engine ``decode_steps > 1``) token-invisible: the loop derives ``p`` from
+the sequence lengths it carries *in-loop* (``lens + 1``, advanced each
+iteration on device), so iteration i of a dispatch draws with exactly the
+key the i-th single-step dispatch would have — streams are bit-identical
+at any horizon, including across a preemption landing between dispatches.
+
 Filtering order follows the common serving convention: temperature scaling,
 then top-k, then top-p (nucleus) on the rescaled distribution, then one
 categorical draw. ``temperature == 0`` short-circuits to raw ``argmax`` on

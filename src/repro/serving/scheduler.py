@@ -40,6 +40,24 @@ growth      crossing a page boundary mid-decode allocates one page. If the
 recycling   EOS / max-new-tokens frees the slot and its pages in O(1); the
             next queued request takes the slot without touching the compiled
             decode step (fixed batch, inactive slots masked by seq_len 0).
+horizon     multi-step decode (engine ``decode_steps > 1``) pre-allocates
+            up to a horizon's worth of pages per slot via
+            ``extend_capacity`` BEFORE the dispatch: free pages only, never
+            an eviction or preemption, and always leaving a reserve of
+            ``(running - 1) + (1 if queued)`` free pages — so single-step
+            preemption timing is unchanged and a starved pool degrades to
+            shorter dispatches, not to new preemptions.
+
+Slot lifecycle formula (the sanitizer re-checks it after every request):
+a slot is either free (``seq_len == 0``, no pages, not in ``running``) or
+owned by exactly one sequence, whose cache length is
+
+    seq_len == prefill_target              while chunk-prefilling,
+    seq_len == len(prompt) + len(generated) - 1   while decoding
+
+(the -1: the newest token's KV is written by the step that consumes it),
+and every allocated page is owned by exactly one slot or refcounted by the
+prefix index — allocator free + owned + cached == num_pages, always.
 """
 from __future__ import annotations
 
@@ -449,6 +467,31 @@ class Scheduler:
         if self.allocator.free_count < target:
             return None
         return self.allocator.alloc(n)
+
+    def extend_capacity(self, slot: int, horizon: int) -> int:
+        """Best-effort page pre-allocation so ``slot`` can absorb up to
+        ``horizon`` more decode tokens without a host resync (the multi-step
+        compiled decode loop's page budget). Takes only *free* pages — never
+        evicts the prefix index, never preempts, so single-step allocation
+        behavior (and preemption timing) is unchanged when the pool runs
+        tight — and leaves one free page per other running sequence (plus
+        one for the admission queue) so a horizon grab cannot starve a
+        neighbour's next-token growth into a preemption that ``horizon=1``
+        would not have caused. Returns the slot's resulting token capacity
+        (allocated pages x page size): the in-loop write limit the compiled
+        loop early-exits on."""
+        cache = self.cache
+        want = min(pages_needed(int(cache.seq_lens[slot]) + horizon,
+                                self.page_size),
+                   cache.max_pages_per_seq)
+        reserve = max(len(self.running) - 1, 0) + (1 if self.queue else 0)
+        while cache.allocated_pages(slot) < want \
+                and self.allocator.free_count > reserve:
+            pages = self.allocator.alloc(1)
+            if pages is None:
+                break
+            cache.append_page(slot, pages[0])
+        return cache.allocated_pages(slot) * self.page_size
 
     def ensure_capacity(self) -> List[SequenceState]:
         """Allocate next-token pages for every running sequence, evicting

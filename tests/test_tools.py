@@ -43,6 +43,14 @@ BASELINE = {
         "deepseek-moe-16b": {"tok_s": 30.0, "prefix_cache": "on"},
     },
     "recompiles": {"engines": 12, "variants": 40, "traces": 40, "excess": 0},
+    "multistep": {
+        "n1": {"tok_s": 300.0, "dispatches_per_token": 0.30},
+        "n4": {"tok_s": 350.0, "dispatches_per_token": 0.09,
+               "speedup_vs_n1": 1.17},
+        "n16": {"tok_s": 380.0, "dispatches_per_token": 0.04,
+                "speedup_vs_n1": 1.27},
+        "diverged_streams": 0,
+    },
 }
 
 
@@ -64,6 +72,10 @@ def test_metric_inventory_matches_baseline_sections():
     assert "sampled.sampler_overhead_pct" in paths
     assert "sampled.diverged_streams" in paths
     assert "families.jamba-v0.1-52b.tok_s" in paths
+    assert "multistep.n4.tok_s" in paths
+    assert "multistep.n16.dispatches_per_token" in paths
+    assert "multistep.n4.speedup_vs_n1" in paths
+    assert "multistep.diverged_streams" in paths
     # static engine numbers are context, not gated; the reference sampler's
     # overhead is context too (only its absolute tok/s is gated)
     assert not any("static" in p for p in paths)
@@ -126,6 +138,33 @@ def test_baseline_without_sampled_section_fails():
     rows = cb.compare(copy.deepcopy(old), old, 0.2)
     missing = [r for r in rows if not r["ok"]]
     assert [r["metric"] for r in missing] == ["sampled.<section>"]
+
+
+def test_baseline_without_multistep_section_fails():
+    """`multistep` became REQUIRED with the compiled decode loop: a baseline
+    predating it would silently drop the dispatch-bound and N-vs-1 stream
+    divergence coverage."""
+    old = {k: v for k, v in copy.deepcopy(BASELINE).items()
+           if k != "multistep"}
+    rows = cb.compare(copy.deepcopy(old), old, 0.2)
+    missing = [r for r in rows if not r["ok"]]
+    assert [r["metric"] for r in missing] == ["multistep.<section>"]
+    assert "re-baseline" in missing[0]["note"]
+
+
+def test_multistep_gate_directions():
+    """dispatches_per_token regressing UP (more host syncs per token) fails;
+    dropping further passes. One N>1-vs-N=1 token mismatch fails at any
+    tolerance — the loop's whole contract is stream invisibility."""
+    cur = copy.deepcopy(BASELINE)
+    cur["multistep"]["n4"]["dispatches_per_token"] = 0.09 * 1.5
+    assert _failed(cb.compare(cur, BASELINE, 0.2)) == \
+        ["multistep.n4.dispatches_per_token"]
+    cur["multistep"]["n4"]["dispatches_per_token"] = 0.09 * 0.5
+    assert _failed(cb.compare(cur, BASELINE, 0.2)) == []
+    cur["multistep"]["diverged_streams"] = 1
+    assert _failed(cb.compare(cur, BASELINE, tolerance=10.0)) == \
+        ["multistep.diverged_streams"]
 
 
 def test_sampler_overhead_gated_in_absolute_points():

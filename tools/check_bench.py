@@ -20,6 +20,19 @@ metric:
                                           divergence is a determinism bug,
                                           not a perf number)
 - ``families.<arch>.tok_s``              (hybrid/SSM/MoE serving sweep)
+- ``multistep.n<N>.tok_s``               (multi-step compiled decode loop at
+                                          decode_steps N in {1,4,16})
+- ``multistep.n<N>.dispatches_per_token`` (host dispatches per decode token:
+                                          higher is a regression; the bench
+                                          itself also hard-bounds it at
+                                          1.1/N)
+- ``multistep.n<N>.speedup_vs_n1``       (N>1 throughput over the N=1 run in
+                                          the SAME artifact: gated so the
+                                          loop never ships slower than
+                                          single-step)
+- ``multistep.diverged_streams``         (N>1 vs N=1 token mismatches: must
+                                          be exactly 0 — determinism bug,
+                                          not a perf number)
 - ``recompiles.excess``                  (jit cache misses after warmup:
                                           must be exactly 0 — a retrace is
                                           a correctness bug, not a perf
@@ -67,7 +80,7 @@ Metric = Tuple[str, float, str]
 
 # sections the BASELINE must carry: absence means it predates the coverage
 # (and would silently un-gate it) — regenerate and commit a fresh artifact
-REQUIRED_SECTIONS = ("families", "recompiles", "sampled")
+REQUIRED_SECTIONS = ("families", "recompiles", "sampled", "multistep")
 
 
 def iter_metrics(baseline: dict) -> Iterator[Metric]:
@@ -95,6 +108,20 @@ def iter_metrics(baseline: dict) -> Iterator[Metric]:
     for arch, d in baseline.get("families", {}).items():
         if "tok_s" in d:
             yield f"families.{arch}.tok_s", d["tok_s"], "higher"
+    multistep = baseline.get("multistep", {})
+    for tag in ("n1", "n4", "n16"):
+        d = multistep.get(tag)
+        if d:
+            yield f"multistep.{tag}.tok_s", d["tok_s"], "higher"
+            if "dispatches_per_token" in d:
+                yield (f"multistep.{tag}.dispatches_per_token",
+                       d["dispatches_per_token"], "lower")
+            if "speedup_vs_n1" in d:
+                yield (f"multistep.{tag}.speedup_vs_n1",
+                       d["speedup_vs_n1"], "higher")
+    if "diverged_streams" in multistep:
+        yield ("multistep.diverged_streams",
+               multistep["diverged_streams"], "zero")
     if "recompiles" in baseline:
         yield ("recompiles.excess",
                baseline["recompiles"].get("excess", 0), "zero")
