@@ -21,7 +21,9 @@ retrace — e.g. mutating the chunk size mid-trace — fails loudly
 (``tests/test_recompile_audit.py`` seeds exactly that).
 
 Coverage matrix (``python -m repro.analysis.recompile`` runs all of it; the
-tests pin representative cells):
+tests pin representative cells). Every row runs once per fused-decode
+setting (``fd`` ∈ {True, False} — both halves of the bit-parity contract
+must keep a closed cache):
 
     every servable family   × tp ∈ {1, ..devices}  × fused sampler × N=1
     dense                   × tp ∈ {1, ..devices}  × ref sampler   × N=1
@@ -29,8 +31,8 @@ tests pin representative cells):
     dense                   × tp ∈ {2, ..devices}  × fused sampler × N=4
 
 The N=4 rows audit the multi-step compiled decode loop: its decode keys
-gain the horizon element (``("decode", sampled, filtered, fused, N)``) and
-the per-dispatch predicate arrays (active mask, budgets, page capacity,
+gain the horizon element (``("decode", sampled, filtered, fused, fd, N)``)
+and the per-dispatch predicate arrays (active mask, budgets, page capacity,
 EOS ids) must not perturb the traced signature. tp > 1 audits shard-map
 the abstract step over a real device mesh, so they need
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (the tests run them
@@ -190,7 +192,7 @@ def _audit_requests(vocab: int, seed: int = 0) -> List[Request]:
 
 
 def audit_family(family: str, *, tp: int = 1, fused_sampling: bool = True,
-                 decode_steps: int = 1,
+                 decode_steps: int = 1, fused_decode: Optional[bool] = None,
                  requests: Optional[Sequence[Request]] = None) -> AuditReport:
     """Abstract-serve one family's smoke arch and assert cache closure.
 
@@ -201,7 +203,10 @@ def audit_family(family: str, *, tp: int = 1, fused_sampling: bool = True,
     filter's variants (same key arity, ``fused`` element pinned False).
     ``decode_steps > 1`` audits the multi-step compiled decode loop's
     variants instead (decode keys gain the horizon element; the per-dispatch
-    predicate arrays must not perturb the traced signature)."""
+    predicate arrays must not perturb the traced signature).
+    ``fused_decode`` pins the fused-decode flag (None = the engine's
+    default resolution), auditing the fused residual-stream + streaming-head
+    step variants — same key arity, ``fd`` element pinned."""
     arch_name = FAMILY_ARCHS[family]
     arch = smoke_config(arch_name)
     if tp > 1 and arch.num_kv_heads % tp and tp % arch.num_kv_heads:
@@ -211,7 +216,8 @@ def audit_family(family: str, *, tp: int = 1, fused_sampling: bool = True,
     engine = AuditEngine(model, params, num_slots=2, num_pages=12,
                          page_size=4, max_seq_len=40, tp=tp,
                          fused_sampling=fused_sampling,
-                         decode_steps=decode_steps)
+                         decode_steps=decode_steps,
+                         fused_decode=fused_decode)
     reqs = list(requests) if requests is not None \
         else _audit_requests(arch.vocab_size)
     results = engine.run(reqs)
@@ -236,21 +242,27 @@ def main() -> int:
     # filtered-variant implementations prove closure, not just the default;
     # every family re-audits at decode_steps=4 so the multi-step compiled
     # decode loop's horizon-keyed variants prove closure too (dense also at
-    # every tp the mesh supports)
-    jobs = [(f, tp, True, 1) for tp in tps for f in SERVABLE_FAMILIES]
-    jobs += [("dense", tp, False, 1) for tp in tps]
-    jobs += [(f, 1, True, 4) for f in SERVABLE_FAMILIES]
-    jobs += [("dense", tp, True, 4) for tp in tps if tp > 1]
-    for family, tp, fused, steps in jobs:
+    # every tp the mesh supports). Every (family, tp) cell audits BOTH
+    # fused-decode settings: the fused residual-stream + streaming-head
+    # variants and the reference variants are separate jit keys (the ``fd``
+    # element) and each must keep a closed cache.
+    jobs = [(f, tp, True, 1, fd) for tp in tps for f in SERVABLE_FAMILIES
+            for fd in (True, False)]
+    jobs += [("dense", tp, False, 1, None) for tp in tps]
+    jobs += [(f, 1, True, 4, fd) for f in SERVABLE_FAMILIES
+             for fd in (True, False)]
+    jobs += [("dense", tp, True, 4, None) for tp in tps if tp > 1]
+    for family, tp, fused, steps, fd in jobs:
         try:
             report = audit_family(family, tp=tp, fused_sampling=fused,
-                                  decode_steps=steps)
+                                  decode_steps=steps, fused_decode=fd)
         except AuditError as e:
             failed += 1
             print(f"FAIL {e}")
         else:
             tag = "" if fused else " [sampler=ref]"
             tag += f" [decode_steps={steps}]" if steps > 1 else ""
+            tag += "" if fd is None else f" [fused_decode={fd}]"
             print(f"ok   {report.summary()}{tag}")
     if failed:
         print(f"[recompile-audit] {failed} audit(s) FAILED — the jit cache "

@@ -61,3 +61,83 @@ def fused_residual_layernorm(x, residual, scale, bias=None, *, eps=1e-5,
         out_shape=jax.ShapeDtypeStruct((r, d), x.dtype),
         interpret=interpret,
     )(*args)
+
+
+def _resnorm_kernel(y_ref, x_ref, scale_ref, bias_ref, h_ref, xo_ref, *,
+                    eps, kind):
+    # model-dtype add (bit-faithful to the unfused `x = x + y`), fp32 stats
+    x2 = x_ref[...] + y_ref[...]
+    xf = x2.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        h = xf * jax.lax.rsqrt(var + eps)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        h = (xf - mu) * jax.lax.rsqrt(var + eps)
+    h = h * scale_ref[...].astype(jnp.float32)
+    if bias_ref is not None:
+        h = h + bias_ref[...].astype(jnp.float32)
+    h_ref[...] = h.astype(h_ref.dtype)
+    xo_ref[...] = x2
+
+
+def decode_residual_norm(y, x, scale, bias=None, *, eps=1e-5,
+                         kind: str = "rmsnorm", interpret: bool = False):
+    """Decode-shaped fused residual+norm: y, x [R, D] -> (normed [R, D],
+    x+y [R, D]). One read of (y, x), one write of each output — the decode
+    layer's three residual-stream HBM round-trips become one."""
+    r, d = x.shape
+    tile = min(TILE_R, r)
+    assert r % tile == 0, (r, tile)
+    row = pl.BlockSpec((tile, d), lambda i: (i, 0))
+    vec = pl.BlockSpec((d,), lambda i: (0,))
+    args = [y, x, scale]
+    in_specs = [row, row, vec]
+    if bias is not None:
+        args.append(bias)
+        in_specs.append(vec)
+        kern = functools.partial(_resnorm_kernel, eps=eps, kind=kind)
+    else:
+        kern = functools.partial(
+            lambda yr, xr, sr, hr, xo, *, eps, kind:
+            _resnorm_kernel(yr, xr, sr, None, hr, xo, eps=eps, kind=kind),
+            eps=eps, kind=kind)
+    return pl.pallas_call(
+        kern,
+        # jaxlint: allow[pallas-grid-floordiv] r % tile asserted above
+        grid=(r // tile,),
+        in_specs=in_specs,
+        out_specs=[row, row],
+        out_shape=[jax.ShapeDtypeStruct((r, d), x.dtype),
+                   jax.ShapeDtypeStruct((r, d), x.dtype)],
+        interpret=interpret,
+    )(*args)
+
+
+def _gated_kernel(y_ref, z_ref, scale_ref, o_ref, *, eps):
+    y = y_ref[...]
+    z = z_ref[...]
+    yf = (y * (z * jax.nn.sigmoid(z))).astype(jnp.float32)
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    o_ref[...] = (yf * jax.lax.rsqrt(var + eps)
+                  * scale_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def gated_rmsnorm(y, z, scale, *, eps=1e-5, interpret: bool = False):
+    """SiLU-gated RMSNorm (mamba mixer epilogue): y, z [R, C] -> [R, C],
+    gate + stats + normalize in one VMEM pass."""
+    r, d = y.shape
+    tile = min(TILE_R, r)
+    assert r % tile == 0, (r, tile)
+    row = pl.BlockSpec((tile, d), lambda i: (i, 0))
+    vec = pl.BlockSpec((d,), lambda i: (0,))
+    return pl.pallas_call(
+        functools.partial(_gated_kernel, eps=eps),
+        # jaxlint: allow[pallas-grid-floordiv] r % tile asserted above
+        grid=(r // tile,),
+        in_specs=[row, row, vec],
+        out_specs=row,
+        out_shape=jax.ShapeDtypeStruct((r, d), y.dtype),
+        interpret=interpret,
+    )(y, z, scale)

@@ -21,3 +21,33 @@ def fused_residual_layernorm(x, residual, scale, bias=None, *, eps=1e-5,
     y = kernel.fused_residual_layernorm(x2, r2, scale, bias, eps=eps,
                                         rms=rms, interpret=interpret)
     return y.reshape(shape)
+
+
+def decode_residual_norm(y, x, scale, bias=None, *, kind: str = "rmsnorm",
+                         eps=1e-5, interpret: bool = False):
+    """Fused decode-path ``x += y; h = norm(x)`` -> ``(h, x_new)``, any
+    leading shape with D last. Bit-identical to the unfused two-op sequence
+    (model-dtype add, verbatim ``_apply_norm`` math — see ``ref.py``); the
+    Pallas path keeps the residual stream VMEM-resident."""
+    if not (supported() or interpret):
+        return ref.decode_residual_norm(y, x, scale, bias, kind=kind,
+                                        eps=eps)
+    shape = x.shape
+    h, x2 = kernel.decode_residual_norm(
+        y.reshape(-1, shape[-1]), x.reshape(-1, shape[-1]), scale, bias,
+        eps=eps, kind=kind, interpret=interpret)
+    return h.reshape(shape), x2.reshape(shape)
+
+
+def gated_rmsnorm(y, z, scale, *, eps=1e-5, interpret: bool = False):
+    """SiLU-gated RMSNorm (the mamba mixer epilogue), any leading shape
+    with the channel dim last. Canonical semantics in ``ref.gated_rmsnorm``
+    (``models.ssm`` delegates there); the Pallas path fuses gate + stats +
+    normalize into one VMEM pass."""
+    if not (supported() or interpret):
+        return ref.gated_rmsnorm(y, z, scale, eps=eps)
+    shape = y.shape
+    out = kernel.gated_rmsnorm(y.reshape(-1, shape[-1]),
+                               z.reshape(-1, shape[-1]), scale, eps=eps,
+                               interpret=interpret)
+    return out.reshape(shape)

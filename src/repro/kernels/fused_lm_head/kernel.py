@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: fused unembed GEMM + sampling epilogue, logits
+VMEM-resident.
+
+One grid pass over vocab tiles: each step multiplies the (revisited) hidden
+block [S, D] by its [D, tile] slice of the head weight and writes the f32
+logits tile into a ``[S, V]`` VMEM scratch that persists across the
+sequential grid. The LAST step runs the whole epilogue — greedy argmax,
+finite probe, temperature scaling, the sort-free top-k/top-p bisections, and
+the canonical inverse-CDF draw — on the on-chip logits via the exact
+``ref.head_epilogue`` code path, then emits only the ``int32 [S]`` tokens
+and the ``[S]`` probe. HBM sees one read of the head weight and never a
+logits row.
+
+VMEM ceiling: the scratch is ``4 * S * V`` bytes — at the serving shapes
+(S = decode slots <= 8, V padded to 128) that is ~8 MB even for a 256k
+vocab, inside the ~16 MB VMEM budget. Larger S*V would need the carried-
+statistics multi-sweep structure of ``ops.py`` instead; the dispatcher can
+only pick this kernel on TPU, where that budget holds for every servable
+config.
+
+The per-row draw uniforms arrive as an input (``[S]``, computed outside
+from the determinism contract's ``fold_in(key(seed), position)`` key):
+threefry does not lower inside Mosaic, and the inverse-CDF draw is defined
+so one scalar per row is all the randomness the epilogue needs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..fused_sampling import ops as sops
+from . import ref
+
+
+def _head_kernel(x_ref, w_ref, rs_ref, temps_ref, tk_ref, tp_ref,
+                 tok_ref, ok_ref, lg_ref, *, n_tiles, tile, sampled,
+                 filtered, softcap):
+    t = pl.program_id(0)
+    # jaxlint: allow[pallas-accum-dtype] deliberately mirrors unembed's
+    # model-dtype matmul (MXU f32 accumulate, round to model dtype, THEN
+    # upcast) — fp32-preferred output would skip the rounding the reference
+    # logits have and break the bit-parity contract
+    lt = (x_ref[...] @ w_ref[...].astype(x_ref.dtype)).astype(jnp.float32)
+    if softcap:
+        lt = softcap * jnp.tanh(lt / softcap)
+    lg_ref[:, pl.dslice(t * tile, tile)] = lt
+
+    @pl.when(t == n_tiles - 1)
+    def _epilogue():
+        # the full-logits oracle, evaluated on the VMEM-resident row with
+        # the sort-free bisection filter (no jnp.sort inside the kernel)
+        tokens, ok = ref.head_epilogue(
+            lg_ref[...], rs_ref[:, 0], temps_ref[:, 0], tk_ref[:, 0],
+            tp_ref[:, 0], sampled=sampled, filtered=filtered,
+            filter_fn=sops._filter_logits_jnp)
+        tok_ref[:, 0] = tokens
+        ok_ref[:, 0] = ok.astype(jnp.int32)
+
+
+def head_tokens(x: jax.Array, w: jax.Array, rs: jax.Array, temps: jax.Array,
+                top_k: jax.Array, top_p: jax.Array, *, sampled: bool,
+                filtered: bool, softcap=None, interpret: bool = False):
+    """``x`` [S, D] (model dtype), ``w`` [D, V] head weight -> ``(tokens
+    int32 [S], ok bool [S])``, bit-identical to ``ref.head_epilogue`` on the
+    materialized logits."""
+    s, d = x.shape
+    v = w.shape[1]
+    tile = ref.gemm_tile(v)
+    n_tiles = v // tile
+    tok, ok = pl.pallas_call(
+        functools.partial(_head_kernel, n_tiles=n_tiles, tile=tile,
+                          sampled=sampled, filtered=filtered,
+                          softcap=softcap),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((s, d), lambda t: (0, 0)),
+            pl.BlockSpec((d, tile), lambda t: (0, t)),
+            pl.BlockSpec((s, 1), lambda t: (0, 0)),
+            pl.BlockSpec((s, 1), lambda t: (0, 0)),
+            pl.BlockSpec((s, 1), lambda t: (0, 0)),
+            pl.BlockSpec((s, 1), lambda t: (0, 0)),
+        ],
+        out_specs=[pl.BlockSpec((s, 1), lambda t: (0, 0)),
+                   pl.BlockSpec((s, 1), lambda t: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((s, 1), jnp.int32),
+                   jax.ShapeDtypeStruct((s, 1), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((s, v), jnp.float32)],
+        interpret=interpret,
+    )(x, w, rs.astype(jnp.float32).reshape(s, 1),
+      temps.astype(jnp.float32).reshape(s, 1),
+      top_k.astype(jnp.int32).reshape(s, 1),
+      top_p.astype(jnp.float32).reshape(s, 1))
+    return tok[:, 0], ok[:, 0].astype(bool)

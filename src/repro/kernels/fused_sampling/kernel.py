@@ -49,14 +49,16 @@ def _filter_kernel(lg_ref, tk_ref, tp_ref, y_ref, *, vocab):
     m = jnp.max(lg_k, axis=-1)[0]
     safe_m = jnp.where(jnp.isfinite(m), m, 0.0)
     u = jnp.exp(lg_k - safe_m)
-    z = jnp.sum(u, axis=-1)[0]
+    # canonical tiled-sequential masses (ref.RED_TILE partials folded left to
+    # right) — the same association every other implementation uses
+    z = ref.tiled_row_sum(u)[0]
     t = jnp.maximum(tp_ref[0, 0] * z, jnp.float32(ref.T_FLOOR))
     keys_k = ref.float_to_key(lg_k)
 
     def topp_body(_, lohi):
         lo, hi = lohi
         mid = lo + ((hi - lo) >> 1)
-        sg = jnp.sum(jnp.where(keys_k > mid, u, 0.0), axis=-1)[0]
+        sg = ref.tiled_row_sum(jnp.where(keys_k > mid, u, 0.0))[0]
         ok = sg < t
         return (jnp.where(ok, lo, mid + jnp.uint32(1)),
                 jnp.where(ok, mid, hi))

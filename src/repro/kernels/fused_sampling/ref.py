@@ -53,6 +53,51 @@ from jax import lax
 # to 0 or an out-of-contract top_p <= 0 slips past SamplingParams
 T_FLOOR = 1.1754943508222875e-38        # smallest normal float32
 
+# canonical reduction tile: every float mass in this package (and in
+# ``kernels.fused_lm_head``, which re-evaluates these predicates while
+# streaming the unembed GEMM over vocab blocks) is summed as partial sums
+# over consecutive RED_TILE-lane tiles, folded left-to-right in tile order.
+# Fixing the association this way is what lets a streaming implementation
+# that never holds the full row reproduce the oracle's floats bit-for-bit:
+# any vocab-block width that is a multiple of RED_TILE yields the same
+# per-tile partials, and the sequential fold is the same add sequence.
+RED_TILE = 128
+
+
+# ------------------------------------------------ canonical tiled reduction ---
+def tile_partial_sums(x: jax.Array) -> jax.Array:
+    """Per-tile partial sums [S, ceil(V / RED_TILE)] of ``x`` [S, V]: each
+    output element is ``jnp.sum`` over one contiguous RED_TILE-wide tile
+    (zero-padded on the right when V is not a tile multiple — exact for the
+    mass terms, which are all >= 0 and 0 at masked entries)."""
+    s, v = x.shape
+    pad = (-v) % RED_TILE
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((s, pad), x.dtype)], axis=-1)
+    return jnp.sum(x.reshape(s, (v + pad) // RED_TILE, RED_TILE), axis=-1)
+
+
+def fold_partials(parts: jax.Array) -> jax.Array:
+    """Strictly sequential left fold of per-tile partials [S, n] -> [S].
+    THE canonical association: ``(((0 + p0) + p1) + ...) + p_{n-1}``. Every
+    implementation — oracle, jnp streaming filter, Pallas kernel, the
+    LM-head vocab-streaming epilogue, and the tp>1 shard combine (which
+    all-gathers per-tile partials and refolds them) — must fold in exactly
+    this order to produce the same float."""
+    s, n = parts.shape
+
+    def body(i, acc):
+        return acc + lax.dynamic_index_in_dim(parts, i, axis=1,
+                                              keepdims=False)
+
+    return lax.fori_loop(0, n, body, jnp.zeros((s,), parts.dtype))
+
+
+def tiled_row_sum(x: jax.Array) -> jax.Array:
+    """Canonical row sum [S] of ``x`` [S, V]: RED_TILE partials folded
+    sequentially (see :func:`fold_partials`)."""
+    return fold_partials(tile_partial_sums(x))
+
 
 # --------------------------------------------------------------- bit keys ----
 def float_to_key(f: jax.Array) -> jax.Array:
@@ -78,7 +123,7 @@ def softmax_mass_stats(lg_k: jax.Array):
     m = jnp.max(lg_k, axis=-1)
     safe_m = jnp.where(jnp.isfinite(m), m, 0.0)
     u = jnp.exp(lg_k - safe_m[:, None])
-    z = jnp.sum(u, axis=-1)
+    z = tiled_row_sum(u)
     return u, z
 
 
@@ -87,7 +132,7 @@ def strict_greater_mass(lg_k: jax.Array, u: jax.Array,
     """``SG(v)`` [S]: total mass of entries strictly above the candidate
     threshold ``v`` [S]. THE nucleus decision predicate's left-hand side;
     every implementation must call this exact reduction."""
-    return jnp.sum(jnp.where(lg_k > v[:, None], u, 0.0), axis=-1)
+    return tiled_row_sum(jnp.where(lg_k > v[:, None], u, 0.0))
 
 
 def count_ge_key(keys: jax.Array, mid: jax.Array) -> jax.Array:
@@ -108,7 +153,7 @@ def mass_above_key(keys_k: jax.Array, u: jax.Array,
     bisections land on thresholds that mask identically — the only
     candidates where the comparisons differ are ``-0.0``/``+0.0``, and IEEE
     compares make those thresholds equivalent as masks."""
-    return jnp.sum(jnp.where(keys_k > mid[:, None], u, 0.0), axis=-1)
+    return tiled_row_sum(jnp.where(keys_k > mid[:, None], u, 0.0))
 
 
 def nucleus_target(top_p: jax.Array, z: jax.Array) -> jax.Array:

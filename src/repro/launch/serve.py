@@ -139,7 +139,8 @@ def _run_continuous(model, params, args, arch) -> dict:
                               prefix_cache=args.prefix_cache,
                               prefill_chunk=args.prefill_chunk or None,
                               tp=args.tp, fused_sampling=_fused(args),
-                              decode_steps=args.decode_steps)
+                              decode_steps=args.decode_steps,
+                              fused_decode=args.fused_decode)
     reqs = [Request(uid=i, prompt=[int(t) for t in prompt[i]],
                     max_new_tokens=glen,
                     sampling=SamplingParams(temperature=args.temperature,
@@ -173,6 +174,10 @@ def _run_continuous(model, params, args, arch) -> dict:
               f"(exits: {dict(engine.decode_exits)})")
     if engine.prefix_cache_off_reason:
         print(f"[serve/continuous] {engine.prefix_cache_off_reason}")
+    if engine.fused_decode_off_reason:
+        print(f"[serve/continuous] {engine.fused_decode_off_reason}")
+    stats["fused_decode"] = engine.fused_decode
+    stats["fused_decode_off_reason"] = engine.fused_decode_off_reason
     if args.tp > 1:
         tps = engine.tp_stats()
         print(f"[serve/continuous] tp={args.tp}: "
@@ -238,6 +243,15 @@ def main(argv=None) -> dict:
                          "EOS/budget/page exhaustion, cutting host syncs by "
                          "~N while keeping token streams bit-identical "
                          "(continuous engine only)")
+    ap.add_argument("--fused-decode", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="fused decode residual stream + streaming LM-head "
+                         "epilogue (no [S, V] logits buffer; token streams "
+                         "bit-identical either way). Default from "
+                         "REPRO_FUSED_DECODE (unset = on); auto-falls back "
+                         "with a recorded reason for post-norm stacks, MLM "
+                         "heads, and non-tile-aligned TP vocab shards "
+                         "(continuous engine only)")
     args = ap.parse_args(argv)
     # one validation for BOTH engines (the static path reads raw args, so
     # without this it would silently reinterpret e.g. --top-p 0)
@@ -256,6 +270,9 @@ def main(argv=None) -> dict:
     if args.decode_steps > 1 and args.engine != "continuous":
         ap.error("--decode-steps requires --engine continuous (the static "
                  "driver decodes in lock-step, one token per dispatch)")
+    if args.fused_decode is not None and args.engine != "continuous":
+        ap.error("--fused-decode requires --engine continuous (the static "
+                 "driver always materializes full logits)")
 
     arch = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     assert not arch.bidirectional, "encoder-only archs have no decode step"

@@ -204,22 +204,31 @@ def init_mlp(key, kind: str, d_model: int, d_ff: int, use_bias: bool,
 
 
 def apply_mlp(kind: str, p: PyTree, x: jax.Array,
-              tp_axis: Optional[str] = None) -> jax.Array:
+              tp_axis: Optional[str] = None, *,
+              fused: bool = False) -> jax.Array:
     with jax.named_scope("mlp"):
-        return _apply_mlp(kind, p, x, tp_axis)
+        return _apply_mlp(kind, p, x, tp_axis, fused=fused)
 
 
 def _apply_mlp(kind: str, p: PyTree, x: jax.Array,
-               tp_axis: Optional[str] = None) -> jax.Array:
+               tp_axis: Optional[str] = None, *,
+               fused: bool = False) -> jax.Array:
     """Feed-forward block. With ``tp_axis`` set (serving TP under shard_map)
     the params are the Megatron shards — w1/w3 column-parallel, w2
     row-parallel — so the local GEMM yields a *partial* output that is
     psum'd over the axis in fp32, and w2's bias is added once, after the
-    reduce (a pre-psum add would count it tp times)."""
+    reduce (a pre-psum add would count it tp times). ``fused`` routes a
+    gelu MLP's bias+activation through ``kernels.bias_gelu`` (one VMEM pass
+    instead of a GEMM-out write + bias read + gelu read; no-op for swiglu,
+    whose epilogue is the gated product, not bias+gelu)."""
     if kind == "swiglu":
         h = silu(dense(x, p["w1"], p.get("b1"))) * dense(x, p["w3"], p.get("b3"))
     elif kind == "gelu":
-        h = gelu(dense(x, p["w1"], p.get("b1")))
+        if fused:
+            from ..kernels.bias_gelu import ops as bg_ops
+            h = bg_ops.bias_gelu(dense(x, p["w1"]), p.get("b1"))
+        else:
+            h = gelu(dense(x, p["w1"], p.get("b1")))
     else:
         raise ValueError(kind)
     if tp_axis is None:

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig, SSMConfig
+from ..kernels.fused_layernorm import ops as ln_ops
 from ..parallel.sharding import constrain
 from .layers import PyTree, dense_init, silu, softplus
 
@@ -186,9 +187,12 @@ def _causal_conv(seq_in: jax.Array, w: jax.Array) -> jax.Array:
 
 def _gated_rmsnorm(y: jax.Array, z: jax.Array, scale: jax.Array,
                    eps: float = 1e-5) -> jax.Array:
-    yf = (y * silu(z)).astype(jnp.float32)
-    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
-    return (yf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(y.dtype)
+    """SiLU-gated RMSNorm of the mixer output. The canonical math lives in
+    ``kernels.fused_layernorm.ref.gated_rmsnorm`` (this delegates); on TPU
+    the ops wrapper runs it as one fused VMEM pass, bit-identically — so
+    every mamba call site (train, prefill chunks, decode) picks up the
+    fusion without a flag."""
+    return ln_ops.gated_rmsnorm(y, z, scale, eps=eps)
 
 
 def _split_proj(arch: ArchConfig, zxbcdt: jax.Array):

@@ -12,12 +12,14 @@ models on the 512-device dry-run). ``arch.remat`` wraps the period body in
 from __future__ import annotations
 
 import functools
+import os
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
+from ..kernels.fused_layernorm import ops as ln_ops
 from ..parallel.sharding import constrain
 from . import attention as attn_lib
 from . import moe as moe_lib
@@ -96,11 +98,34 @@ def init_stack(key, arch: ArchConfig, fuse_qkv: bool, dtype,
 
 # ------------------------------------------------------------------ block apply ---
 
+def fused_blocks_enabled() -> bool:
+    """Training/prefill block fusion (``fused_residual_layernorm`` +
+    ``bias_gelu``) — default OFF. Unlike fused *decode* this is a
+    tolerance-parity path, not a bit-parity one: the residual+norm kernel
+    adds in fp32 where the unfused block adds in model dtype, so bf16
+    training losses match to rounding, not bitwise."""
+    return os.environ.get("REPRO_FUSED_BLOCKS", "0") == "1"
+
+
 def apply_block(arch: ArchConfig, p: PyTree, x: jax.Array, mixer: str,
                 positions: jax.Array, causal: bool, mrope_positions=None,
-                enc_out=None) -> Tuple[jax.Array, jax.Array]:
-    """Pre-norm (or BERT post-norm) residual block. Returns (y, aux_loss)."""
+                enc_out=None,
+                fused: Optional[bool] = None) -> Tuple[jax.Array, jax.Array]:
+    """Pre-norm (or BERT post-norm) residual block. Returns (y, aux_loss).
+
+    ``fused`` (None = read ``REPRO_FUSED_BLOCKS``, default off) routes the
+    residual-add + norm pairs through ``kernels.fused_layernorm`` — the
+    post-norm sites through ``fused_residual_layernorm`` (the Fig-13 BERT
+    pattern: add + stats + normalize in one VMEM pass), the pre-norm
+    mixer-add + ln2 pair through ``decode_residual_norm`` — and the gelu
+    MLP's bias+activation through ``kernels.bias_gelu``. Tolerance parity
+    with the unfused block (``tests/test_kernels.py`` pins it); training
+    and chunked prefill only — the decode path has its own bit-exact
+    fusion (``paged_decode_period``)."""
+    if fused is None:
+        fused = fused_blocks_enabled()
     aux = jnp.zeros((), jnp.float32)
+    rms = arch.norm == "rmsnorm"
 
     def mix(h):
         if mixer == "attn":
@@ -109,8 +134,23 @@ def apply_block(arch: ArchConfig, p: PyTree, x: jax.Array, mixer: str,
                                             mrope_positions=mrope_positions)
         return ssm_lib.apply_mamba(arch, p["mamba"], h)
 
+    # pre-norm ln2 can absorb the mixer's residual add; not when the block
+    # has a cross-attention insert between the two sites, and not for ssm
+    # blocks (no ln2 exists)
+    fuse_pre_ln2 = (fused and not arch.post_norm and arch.family != "ssm"
+                    and not (enc_out is not None and "xattn" in p))
+    h = None
     if arch.post_norm:
-        x = apply_norm(arch.norm, p["ln1"], x + mix(x))
+        y = mix(x)
+        if fused:
+            x = ln_ops.fused_residual_layernorm(
+                y, x, p["ln1"]["scale"], p["ln1"].get("bias"), rms=rms)
+        else:
+            x = apply_norm(arch.norm, p["ln1"], x + y)
+    elif fuse_pre_ln2:
+        y = mix(apply_norm(arch.norm, p["ln1"], x))
+        h, x = ln_ops.decode_residual_norm(
+            y, x, p["ln2"]["scale"], p["ln2"].get("bias"), kind=arch.norm)
     else:
         x = x + mix(apply_norm(arch.norm, p["ln1"], x))
 
@@ -118,6 +158,7 @@ def apply_block(arch: ArchConfig, p: PyTree, x: jax.Array, mixer: str,
         h = apply_norm(arch.norm, p["ln_x"], x)
         enc_kv = attn_lib.project_enc_kv(arch, p["xattn"], enc_out)
         x = x + attn_lib.apply_cross_attention(arch, p["xattn"], h, enc_kv)
+        h = None
 
     if arch.family == "ssm":
         return x, aux
@@ -126,14 +167,19 @@ def apply_block(arch: ArchConfig, p: PyTree, x: jax.Array, mixer: str,
         if "moe" in p:
             y, aux = moe_lib.apply_moe(arch, p["moe"], x)
         else:
-            y = apply_mlp(arch.mlp, p["mlp"], x)
-        x = apply_norm(arch.norm, p["ln2"], x + y)
+            y = apply_mlp(arch.mlp, p["mlp"], x, fused=fused)
+        if fused:
+            x = ln_ops.fused_residual_layernorm(
+                y, x, p["ln2"]["scale"], p["ln2"].get("bias"), rms=rms)
+        else:
+            x = apply_norm(arch.norm, p["ln2"], x + y)
     else:
-        h = apply_norm(arch.norm, p["ln2"], x)
+        if h is None:
+            h = apply_norm(arch.norm, p["ln2"], x)
         if "moe" in p:
             y, aux = moe_lib.apply_moe(arch, p["moe"], h)
         else:
-            y = apply_mlp(arch.mlp, p["mlp"], h)
+            y = apply_mlp(arch.mlp, p["mlp"], h, fused=fused)
         x = x + y
     return x, aux
 
@@ -286,12 +332,49 @@ def _decode_block_ffn(arch: ArchConfig, blk: PyTree, x: jax.Array,
     return apply_norm(arch.norm, blk["ln2"], x + y) if arch.post_norm else x + y
 
 
+def _fused_residual_norm(arch: ArchConfig, ln: PyTree, d: jax.Array,
+                         x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Fold the pending residual delta ``d`` into the stream and norm it in
+    one fused pass: ``x += d; h = norm(x)`` -> ``(h, x_new)``. Bit-identical
+    to the unfused two-op sequence (see ``kernels.fused_layernorm.ref``)."""
+    return ln_ops.decode_residual_norm(d, x, ln["scale"], ln.get("bias"),
+                                       kind=arch.norm)
+
+
+def _fused_block_delta(arch: ArchConfig, blk: PyTree, h: jax.Array,
+                       tp_axis: Optional[str] = None,
+                       moe_eff_cap: Optional[jax.Array] = None) -> jax.Array:
+    """MoE/MLP tail of a fused decode block: returns the residual *delta*
+    (the add is deferred into the next in-period layer's fused pre-norm, or
+    into the period-end boundary add for the last layer)."""
+    if "moe" in blk:
+        y, _ = moe_lib.apply_moe(arch, blk["moe"], h, tp_axis, moe_eff_cap)
+        return y
+    return apply_mlp(arch.mlp, blk["mlp"], h, tp_axis)
+
+
 def paged_decode_period(arch: ArchConfig, p: PyTree, cache: PyTree,
                         x: jax.Array, page_table: jax.Array,
                         seq_lens: jax.Array, mrope_positions=None,
-                        tp_axis: Optional[str] = None
-                        ) -> Tuple[jax.Array, PyTree]:
+                        tp_axis: Optional[str] = None,
+                        fused: bool = False) -> Tuple[jax.Array, PyTree]:
+    """One period of single-token decode. ``fused=True`` carries the
+    residual stream through the period as an ``(x, pending-delta)`` pair:
+    every residual-add + pre-norm pair collapses into one
+    ``decode_residual_norm`` pass (the mixer add at each ln2 site; the
+    previous layer's MLP delta at each ln1 site of a multi-layer period),
+    so the residual stream makes one HBM round-trip per fused site instead
+    of three (add-out, norm-read, delta-write). The pending delta is folded
+    by a plain add before returning — the period's carry interface (and,
+    bitwise, its result: the fused kernels duplicate the unfused op
+    sequence exactly, and the boundary add sits at the same graph position
+    as the unfused path's, which keeps XLA's context-sensitive fusion
+    choices identical across the two variants) matches ``fused=False``.
+    Pre-norm stacks only."""
+    if fused:
+        assert not arch.post_norm, (arch.name, "fused decode is pre-norm only")
     new_cache: PyTree = {}
+    d: Optional[jax.Array] = None     # pending in-period residual delta
     # a slot with seq_len 0 is empty or mid-prefill: attention routes its
     # writes to the null page; mamba layers must instead keep their state row
     active = seq_lens > 0
@@ -306,30 +389,53 @@ def paged_decode_period(arch: ArchConfig, p: PyTree, cache: PyTree,
                     seq_lens, mrope_positions, tp_axis)
             return ssm_lib.paged_decode_mamba_layer(
                 arch, blk["mamba"], h, cache[f"layer_{i}"], active)
-        x, new_cache[f"layer_{i}"] = _decode_block_mix(arch, blk, x, mix)
-        x = _decode_block_ffn(arch, blk, x, tp_axis)
+        if fused:
+            if d is None:
+                h = apply_norm(arch.norm, blk["ln1"], x)
+            else:
+                h, x = _fused_residual_norm(arch, blk["ln1"], d, x)
+            y, new_cache[f"layer_{i}"] = mix(h)
+            if arch.family == "ssm":
+                d = y  # mamba2 blocks have no MLP: y is the pending delta
+            else:
+                h2, x = _fused_residual_norm(arch, blk["ln2"], y, x)
+                d = _fused_block_delta(arch, blk, h2, tp_axis)
+        else:
+            x, new_cache[f"layer_{i}"] = _decode_block_mix(arch, blk, x, mix)
+            x = _decode_block_ffn(arch, blk, x, tp_axis)
+    if fused:
+        x = x + d
     return x, new_cache
 
 
 def paged_decode_stack(arch: ArchConfig, stacked: PyTree, caches: PyTree,
                        x: jax.Array, page_table: jax.Array,
                        seq_lens: jax.Array, mrope_positions=None,
-                       tp_axis: Optional[str] = None
-                       ) -> Tuple[jax.Array, PyTree]:
+                       tp_axis: Optional[str] = None,
+                       fused: bool = False):
+    """Single-token decode through the whole stack. ``fused=True`` runs the
+    residual+norm-fused period bodies; the carry between periods is the
+    plain completed residual either way (bit-identical to ``fused=False`` —
+    the fused body keeps every residual add at the same graph position, so
+    XLA's context-sensitive lowering of the norm reductions matches).
+    Pre-norm stacks only."""
+    if fused:
+        assert not arch.post_norm, (arch.name, "fused decode is pre-norm only")
     if isinstance(stacked, dict) and any(k.startswith("period_") for k in stacked):
         new_caches: PyTree = {}
         for z in range(len(stacked)):
-            x, nc = paged_decode_period(arch, stacked[f"period_{z}"],
-                                        caches[f"period_{z}"], x, page_table,
-                                        seq_lens, mrope_positions, tp_axis)
+            x, nc = paged_decode_period(
+                arch, stacked[f"period_{z}"], caches[f"period_{z}"],
+                x, page_table, seq_lens, mrope_positions,
+                tp_axis, fused=fused)
             new_caches[f"period_{z}"] = nc
         return x, new_caches
 
     def scan_body(h, inputs):
         period_params, cache = inputs
-        h, new_cache = paged_decode_period(arch, period_params, cache, h,
-                                           page_table, seq_lens,
-                                           mrope_positions, tp_axis)
+        h, new_cache = paged_decode_period(
+            arch, period_params, cache, h, page_table,
+            seq_lens, mrope_positions, tp_axis, fused=fused)
         return h, new_cache
     x, new_caches = jax.lax.scan(scan_body, x, (stacked, caches))
     return x, new_caches
@@ -349,7 +455,7 @@ def paged_decode_loop(arch: ArchConfig, stacked: PyTree, caches: PyTree,
                       budget: jax.Array, page_limit: jax.Array,
                       eos_ids: jax.Array, *, horizon: int, embed, unembed,
                       select, probe: bool = False,
-                      tp_axis: Optional[str] = None):
+                      tp_axis: Optional[str] = None, fused_head=None):
     """Up to ``horizon`` decode iterations in one on-device ``lax.while_loop``.
 
     The loop body is exactly one single-step decode (``paged_decode_stack``
@@ -387,6 +493,12 @@ def paged_decode_loop(arch: ArchConfig, stacked: PyTree, caches: PyTree,
     ``embed``/``unembed`` are the model's token embedding / LM head;
     ``select(logits [S, V], positions [S]) -> int32 [S]`` picks tokens
     (argmax or the fused-sampling epilogue) from the in-carry positions.
+    ``fused_head(x, positions) -> (tokens [S], ok [S])`` replaces
+    ``unembed`` + ``select`` on the fused-decode path: the final hidden
+    state from ``paged_decode_stack(fused=True)`` goes straight into the
+    streaming final-norm + LM-head epilogue, no [S, V] logits buffer ever
+    exists, and the finite probe rides out of the epilogue's in-register
+    sweep instead of scanning materialized logits.
     Inactive slots (mid-prefill or empty, masked to the null page) never
     advance ``seq_lens``, never set exit bits, and their junk draws are
     discarded by the host.
@@ -401,19 +513,29 @@ def paged_decode_loop(arch: ArchConfig, stacked: PyTree, caches: PyTree,
     def _body(carry):
         i, tok, lens, caches, buf, reasons, ok = carry
         x = embed(tok[:, None])
-        x, caches = paged_decode_stack(arch, stacked, caches, x, page_table,
-                                       lens, tp_axis=tp_axis)
-        logits = unembed(x)
-        new = select(logits, lens + 1)
+        if fused_head is not None:
+            x, caches = paged_decode_stack(
+                arch, stacked, caches, x, page_table, lens, tp_axis=tp_axis,
+                fused=True)
+            new, ok_rows = fused_head(x, lens + 1)
+            if probe:
+                # row-wise finite probe from the epilogue's streaming sweep
+                # — boolean-identical to scanning the full logits row
+                ok = ok & jnp.all(ok_rows | ~active)
+        else:
+            x, caches = paged_decode_stack(arch, stacked, caches, x,
+                                           page_table, lens, tp_axis=tp_axis)
+            logits = unembed(x)
+            new = select(logits, lens + 1)
+            if probe:
+                # inactive slots read the null page and may legitimately
+                # produce junk — probe only the live rows
+                ok = ok & jnp.all(jnp.isfinite(logits) | ~active[:, None])
         buf = buf.at[i].set(new)
         reasons = reasons \
             | jnp.where(active & (new == eos_ids), EXIT_EOS, 0) \
             | jnp.where(active & (i + 1 >= budget), EXIT_BUDGET, 0)
         lens = lens + active.astype(lens.dtype)
-        if probe:
-            # inactive slots read the null page and may legitimately
-            # produce junk — probe only the live rows
-            ok = ok & jnp.all(jnp.isfinite(logits) | ~active[:, None])
         return (i + 1, new, lens, caches, buf, reasons, ok)
 
     carry = (jnp.zeros((), jnp.int32), tokens, seq_lens, caches,
@@ -433,9 +555,12 @@ def paged_prefill_period(arch: ArchConfig, p: PyTree, cache: PyTree,
                          total_len: jax.Array, slot: jax.Array,
                          moe_cap: Optional[jax.Array] = None,
                          mrope_positions=None,
-                         tp_axis: Optional[str] = None
-                         ) -> Tuple[jax.Array, PyTree]:
+                         tp_axis: Optional[str] = None,
+                         fused: bool = False) -> Tuple[jax.Array, PyTree]:
+    if fused:
+        assert not arch.post_norm, (arch.name, "fused prefill is pre-norm only")
     new_cache: PyTree = {}
+    d: Optional[jax.Array] = None     # pending in-period residual delta
     # MoE capacity for a prompt chunk: the FULL context's bucket (computed
     # host-side by the engine with the same math as the static path), not
     # the padded chunk shape's. The trailing padding itself is harmless —
@@ -457,9 +582,23 @@ def paged_prefill_period(arch: ArchConfig, p: PyTree, cache: PyTree,
             return ssm_lib.paged_prefill_mamba_layer(
                 arch, blk["mamba"], h, cache[f"layer_{i}"], slot, start,
                 total_len)
-        x, new_cache[f"layer_{i}"] = _decode_block_mix(arch, blk, x, mix)
-        x = _decode_block_ffn(arch, blk, x, tp_axis,
-                              moe_eff_cap=moe_eff_cap)
+        if fused:
+            if d is None:
+                h = apply_norm(arch.norm, blk["ln1"], x)
+            else:
+                h, x = _fused_residual_norm(arch, blk["ln1"], d, x)
+            y, new_cache[f"layer_{i}"] = mix(h)
+            if arch.family == "ssm":
+                d = y
+            else:
+                h2, x = _fused_residual_norm(arch, blk["ln2"], y, x)
+                d = _fused_block_delta(arch, blk, h2, tp_axis, moe_eff_cap)
+        else:
+            x, new_cache[f"layer_{i}"] = _decode_block_mix(arch, blk, x, mix)
+            x = _decode_block_ffn(arch, blk, x, tp_axis,
+                                  moe_eff_cap=moe_eff_cap)
+    if fused:
+        x = x + d
     return x, new_cache
 
 
@@ -478,32 +617,37 @@ def paged_prefill_stack(arch: ArchConfig, stacked: PyTree, caches: PyTree,
                         total_len: jax.Array, slot: jax.Array = None,
                         moe_cap: Optional[jax.Array] = None,
                         mrope_positions=None,
-                        tp_axis: Optional[str] = None
-                        ) -> Tuple[jax.Array, PyTree]:
+                        tp_axis: Optional[str] = None,
+                        fused: bool = False):
     """Chunked prefill: one prompt chunk [1, C, D] of one sequence through
     the stack — attention K/V written straight into the sequence's pages,
     mamba state advanced in the sequence's slot row (``slot``; only needed
     for SSM-bearing stacks), MoE layers dropping at the full context's
     capacity (``moe_cap``, host-computed; only read for MoE-bearing
     stacks). The caller slices the sampling position out of the returned
-    activations with ``chunk_final_hidden``."""
+    activations with ``chunk_final_hidden``. ``fused=True`` mirrors
+    ``paged_decode_stack``: residual+norm-fused period bodies, plain
+    completed residual as the carry, bit-identical to ``fused=False``."""
     if slot is None:
         slot = jnp.zeros((), jnp.int32)
+    if fused:
+        assert not arch.post_norm, (arch.name, "fused prefill is pre-norm only")
     if isinstance(stacked, dict) and any(k.startswith("period_") for k in stacked):
         new_caches: PyTree = {}
         for z in range(len(stacked)):
-            x, nc = paged_prefill_period(arch, stacked[f"period_{z}"],
-                                         caches[f"period_{z}"], x, page_row,
-                                         start, total_len, slot, moe_cap,
-                                         mrope_positions, tp_axis)
+            x, nc = paged_prefill_period(
+                arch, stacked[f"period_{z}"], caches[f"period_{z}"],
+                x, page_row, start, total_len, slot,
+                moe_cap, mrope_positions, tp_axis, fused=fused)
             new_caches[f"period_{z}"] = nc
         return x, new_caches
 
     def scan_body(h, inputs):
         period_params, cache = inputs
-        h, new_cache = paged_prefill_period(arch, period_params, cache, h,
-                                            page_row, start, total_len, slot,
-                                            moe_cap, mrope_positions, tp_axis)
+        h, new_cache = paged_prefill_period(
+            arch, period_params, cache, h, page_row,
+            start, total_len, slot, moe_cap, mrope_positions, tp_axis,
+            fused=fused)
         return h, new_cache
     x, new_caches = jax.lax.scan(scan_body, x, (stacked, caches))
     return x, new_caches

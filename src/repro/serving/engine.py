@@ -79,15 +79,33 @@ capacity via ``Scheduler.extend_capacity`` — free pages only, never a
 preemption), then reconciles the returned ``(buffer, k, reasons)`` through
 the ordinary finish/admit/preempt path. Invariants the tests pin:
 
-- jit-cache key: ``("decode", sampled, filtered, fused)`` at N=1 (the
+- jit-cache key: ``("decode", sampled, filtered, fused, fd)`` at N=1 (the
   single-step path is literally unchanged) and
-  ``("decode", sampled, filtered, fused, N)`` at N>1 — prefill keys never
-  carry the horizon. ``analysis/recompile.py`` audits both shapes closed.
+  ``("decode", sampled, filtered, fused, fd, N)`` at N>1 — prefill keys
+  never carry the horizon. ``fd`` is the engine's ``fused_decode`` flag
+  (below). ``analysis/recompile.py`` audits both shapes closed.
 - ``steps`` counts loop iterations, ``decode_dispatches`` host dispatches,
   ``decode_exits`` why each dispatch returned; at N=1 the two counters are
   equal and no exit accounting runs.
 - a preemption can only land *between* dispatches; forced replay re-derives
   every key from stream position, so the horizon is token-invisible.
+
+Fused decode (``fused_decode = True``, the default where supported) removes
+the residual-stream HBM round-trips at every fused norm site and the [S, V]
+logits buffer entirely: inside each layer period the residual rides as an
+(x, pending-delta) pair folded by the fused residual+norm kernels
+(``kernels.fused_layernorm.decode_residual_norm``) and completed by a plain
+add at the period boundary (so the scan carry — and XLA's context-sensitive
+lowering of the norm reductions — matches the unfused body exactly), and
+the LM head + token selection collapse into a vocab-tiled streaming
+epilogue (``kernels.fused_lm_head``) that carries max/argmax, the top-k/
+top-p bisection counts, softmax masses, and the inverse-CDF draw in the
+GEMM accumulator. Token streams are bit-identical to the unfused path —
+greedy and seeded-sampled, across preemption replay, decode_steps horizons,
+and tp — because every float reduction is the same canonically-tiled sum on
+both paths and every residual add sits at the same graph position.
+Unsupported layouts (post-norm stacks, MLM heads, TP shards off the
+reduction tile) fall back with ``fused_decode_off_reason`` set.
 """
 from __future__ import annotations
 
@@ -103,12 +121,16 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..analysis.sanitize import (check_engine, check_finite_probe,
                                  sanitize_enabled)
+from ..kernels.fused_lm_head import ops as head_ops
+from ..kernels.fused_lm_head import ref as head_ref
 from ..models import transformer as tf
+from ..models.layers import apply_norm, pad_vocab, unembed
 from ..models.model import Model
 from ..models.moe import capacity_per_row
 from ..parallel import sharding as shardlib
 from .kv_cache import pages_needed
-from .sampling import fused_sampling_enabled, sample_tokens
+from .sampling import (fused_decode_enabled, fused_sampling_enabled,
+                       sample_tokens)
 from .scheduler import Request, Scheduler, SequenceState
 
 SERVABLE_FAMILIES = ("dense", "moe", "vlm", "ssm", "hybrid")
@@ -186,7 +208,8 @@ class ContinuousEngine:
                  prefill_chunk: Optional[int] = None, tp: int = 1,
                  mesh=None, sanitize: Optional[bool] = None,
                  fused_sampling: Optional[bool] = None,
-                 decode_steps: int = 1):
+                 decode_steps: int = 1,
+                 fused_decode: Optional[bool] = None):
         arch = model.arch
         assert arch.family in SERVABLE_FAMILIES, \
             (f"continuous engine serves families {SERVABLE_FAMILIES}; "
@@ -235,6 +258,33 @@ class ContinuousEngine:
         # (positions advance in-carry exactly as the host would have).
         assert decode_steps >= 1, decode_steps
         self.decode_steps = int(decode_steps)
+        # fused decode residual stream + streaming LM head: the decode/
+        # final-prefill steps fold each residual-add + pre-norm pair into
+        # one fused kernel pass inside the layer period and run the unembed
+        # GEMM as a vocab-tiled streaming epilogue that samples
+        # in-accumulator — no [S, V] logits buffer ever reaches HBM.
+        # Bit-identical token
+        # streams by construction (tests pin greedy + seeded-sampled parity
+        # incl. preemption replay), so the flag only changes memory traffic.
+        # Static per engine and part of every step's jit-cache key. Falls
+        # back (with a recorded reason) where the fusion's preconditions
+        # fail: post-norm stacks, MLM heads, and TP shard widths that don't
+        # land on the canonical reduction tile.
+        want_fd = fused_decode_enabled() if fused_decode is None \
+            else bool(fused_decode)
+        self.fused_decode_off_reason: Optional[str] = None
+        if want_fd:
+            if arch.post_norm:
+                self.fused_decode_off_reason = \
+                    "fused decode requires a pre-norm stack"
+            elif arch.mlm_transform:
+                self.fused_decode_off_reason = \
+                    "fused decode does not support MLM-transform heads"
+            elif not head_ops.tp_fusable(pad_vocab(arch.vocab_size), tp):
+                self.fused_decode_off_reason = (
+                    f"vocab shard {pad_vocab(arch.vocab_size)}/{tp} does not "
+                    f"land on the {head_ops.RED_TILE}-wide reduction tile")
+        self.fused_decode = want_fd and self.fused_decode_off_reason is None
         # prefix caching shares *pages*; a mamba mixer's recurrent state is
         # not page-decomposable (a cached KV page is useless without the SSM
         # state at its boundary), so SSM-bearing archs gate it off — loudly:
@@ -364,12 +414,15 @@ class ContinuousEngine:
     def _decode_fn(self, sampled: bool, filtered: bool):
         # `fused` names the filter implementation, so it only exists in
         # variants that filter at all — greedy/temperature-only variants
-        # stay shared between fused and reference engines
+        # stay shared between fused and reference engines. `fd` (fused
+        # decode) reshapes the whole step — residual-stream pair carry plus
+        # the streaming LM-head epilogue — so it keys every variant.
         fused = self.fused_sampling and filtered
-        key = ("decode", sampled, filtered, fused)
+        key = ("decode", sampled, filtered, fused, self.fused_decode)
         if key not in self._jit_cache:
             impl = functools.partial(self._decode_impl, sampled=sampled,
-                                     filtered=filtered, fused=fused)
+                                     filtered=filtered, fused=fused,
+                                     fd=self.fused_decode)
             in_specs = (self._param_specs, self._pool_specs, P(None, None),
                         P(None), P(None), P(None), P(None), P(None), P(None))
             out_specs = (P(None), self._pool_specs)
@@ -385,10 +438,12 @@ class ContinuousEngine:
         engine at ``decode_steps=N`` compiles (lazily, per sampling
         variant) loops of exactly that horizon and nothing else."""
         fused = self.fused_sampling and filtered
-        key = ("decode", sampled, filtered, fused, self.decode_steps)
+        key = ("decode", sampled, filtered, fused, self.fused_decode,
+               self.decode_steps)
         if key not in self._jit_cache:
             impl = functools.partial(self._decode_multi_impl, sampled=sampled,
                                      filtered=filtered, fused=fused,
+                                     fd=self.fused_decode,
                                      horizon=self.decode_steps)
             in_specs = (self._param_specs, self._pool_specs, P(None, None)) \
                 + (P(None),) * 10
@@ -401,11 +456,11 @@ class ContinuousEngine:
 
     def _prefill_fn(self, final: bool, sampled: bool, filtered: bool):
         fused = self.fused_sampling and filtered
-        key = ("prefill", final, sampled, filtered, fused)
+        key = ("prefill", final, sampled, filtered, fused, self.fused_decode)
         if key not in self._jit_cache:
             impl = functools.partial(self._prefill_impl, final=final,
                                      sampled=sampled, filtered=filtered,
-                                     fused=fused)
+                                     fused=fused, fd=self.fused_decode)
             in_specs = (self._param_specs, self._pool_specs, P(None, None),
                         P(None), P(), P(), P(), P(), P(), P(), P(), P())
             out_specs = (P(), self._pool_specs)
@@ -436,9 +491,61 @@ class ContinuousEngine:
         return self._psums_per_step * payload * 2 * (self.tp - 1) // self.tp
 
     # ------------------------------------------------------------- jitted fns ---
+    def _fused_head(self, params, x, positions, seeds, temps, top_ks,
+                    top_ps, *, sampled, filtered, fused):
+        """Fused final-norm + streaming LM head: final hidden ``x``
+        [S, 1, D] -> ``(tokens [S], ok [S])`` with no [S, V] logits buffer.
+
+        On TPU the unembed GEMM streams over vocab tiles with the sampling
+        statistics (max/argmax, filter-threshold bisections, softmax
+        masses, the inverse-CDF draw) carried in the accumulator —
+        bit-identical to materializing the logits and running
+        ``sample_tokens`` (the ``fused_decode`` contract; the tiled
+        reductions are the canonical ones both paths share). ``ok`` is the
+        per-row finite probe from the same streaming sweep. Under TP each
+        shard streams its own vocab slice and the combines move
+        O(S * V / RED_TILE) statistics, never logits.
+
+        Off-TPU the fallback is the *op-identical* unfused tail (full
+        unembed + ``sample_tokens``), not the jnp streaming emulation: XLA
+        CPU lowers float reductions context-sensitively, so two graphs
+        that differ anywhere downstream of a norm or GEMM can round the
+        SAME math to ulp-different values — the only structure that
+        guarantees the fused_decode bit-parity contract on CPU is one
+        whose HLO is identical. The streaming emulation stays covered by
+        the standalone and interpret-mode parity tests (where jit-vs-jit
+        equality holds because both sides are whole graphs)."""
+        arch = self.arch
+        x = shardlib.constrain(x, "batch", None, None)
+        hidden = apply_norm(arch.norm, params["final_norm"], x)
+        if not head_ops.supported():
+            tied = params["embed"]["embedding"] if arch.tie_embeddings \
+                else None
+            logits = unembed(params.get("out", {}), hidden, tied,
+                             arch.logit_softcap)[:, 0]
+            if not sampled:
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            else:
+                tok = sample_tokens(logits, seeds, positions, temps,
+                                    top_ks, top_ps, filtered=filtered,
+                                    fused=fused)
+            return tok, jnp.isfinite(logits).all(axis=-1)
+        if arch.tie_embeddings:
+            w = params["embed"]["embedding"].astype(hidden.dtype).T
+        else:
+            w = params["out"]["head"].astype(hidden.dtype)
+        w = shardlib.constrain(w, None, "vocab")
+        hidden = hidden.reshape(hidden.shape[0], hidden.shape[-1])
+        rs = head_ref.row_uniforms(seeds, positions)
+        softcap = arch.logit_softcap if arch.logit_softcap > 0 else None
+        return head_ops.head_tokens(
+            hidden, w, rs, temps, top_ks, top_ps, sampled=sampled,
+            filtered=filtered, softcap=softcap, axis_name=self.tp_axis,
+            tp=self.tp)
+
     def _decode_impl(self, params, pools, page_table, seq_lens, tokens,
                      seeds, temps, top_ks, top_ps, *, sampled, filtered,
-                     fused):
+                     fused, fd):
         """tokens [S] -> (next token [S], new pools). S == num_slots.
 
         Selection stays on device — greedy slots take a raw argmax, sampled
@@ -449,8 +556,24 @@ class ContinuousEngine:
         sampler work — no filtering, no key fold-ins), temperature-only
         batches skip the filtering epilogue, filtered batches run either the
         streaming fused filter or the sort-based reference, and each extra
-        variant compiles only once the matching traffic shows up."""
+        variant compiles only once the matching traffic shows up.
+
+        ``fd`` (fused decode) swaps both halves of the step: the stack runs
+        the residual+norm-fused layer bodies, and the final-norm + LM head
+        + selection collapse into the streaming vocab-tiled epilogue of
+        ``_fused_head`` — same tokens, same probe semantics, no [S, V]
+        logits round-trip."""
         x = self.model._embed(params, tokens[:, None])
+        if fd:
+            x, pools = tf.paged_decode_stack(
+                self.arch, params["blocks"], pools, x, page_table, seq_lens,
+                tp_axis=self.tp_axis, fused=True)
+            tok, ok = self._fused_head(params, x, seq_lens + 1, seeds,
+                                       temps, top_ks, top_ps, sampled=sampled,
+                                       filtered=filtered, fused=fused)
+            if self.sanitize:
+                return tok, pools, jnp.all(ok | (seq_lens == 0))
+            return tok, pools
         x, pools = tf.paged_decode_stack(self.arch, params["blocks"], pools,
                                          x, page_table, seq_lens,
                                          tp_axis=self.tp_axis)
@@ -477,7 +600,7 @@ class ContinuousEngine:
 
     def _decode_multi_impl(self, params, pools, page_table, seq_lens, tokens,
                            active, budget, page_limit, eos_ids, seeds, temps,
-                           top_ks, top_ps, *, sampled, filtered, fused,
+                           top_ks, top_ps, *, sampled, filtered, fused, fd,
                            horizon):
         """tokens [S] -> (emitted tokens [horizon, S], steps executed,
         exit-reason bits [S], new pools). One ``lax.while_loop`` around the
@@ -503,15 +626,22 @@ class ContinuousEngine:
             return sample_tokens(logits, seeds, positions, temps, top_ks,
                                  top_ps, filtered=filtered, fused=fused)
 
+        def fused_head(x, positions):
+            # the loop body's LM head on the fused-decode path: streaming
+            # epilogue straight off the final hidden, finite probe included
+            return self._fused_head(params, x, positions, seeds,
+                                    temps, top_ks, top_ps, sampled=sampled,
+                                    filtered=filtered, fused=fused)
+
         return tf.paged_decode_loop(
             self.arch, params["blocks"], pools, tokens, page_table, seq_lens,
             active, budget, page_limit, eos_ids, horizon=horizon, embed=embed,
             unembed=unembed, select=select, probe=self.sanitize,
-            tp_axis=self.tp_axis)
+            tp_axis=self.tp_axis, fused_head=fused_head if fd else None)
 
     def _prefill_impl(self, params, pools, tokens, page_row, slot, start,
                       total, moe_cap, seed, temp, top_k, top_p, *, final,
-                      sampled, filtered, fused):
+                      sampled, filtered, fused, fd):
         """One prompt chunk of one sequence. tokens [1, C] (padded past
         ``total - start`` valid tokens) -> (token after the chunk's last
         valid token [scalar], new pools). One compiled shape (variants on
@@ -523,8 +653,30 @@ class ContinuousEngine:
         math; attention-only / MoE-free stacks ignore them). The emitted
         token's stream position is ``total``, so its sampling key matches
         the decode step that would have produced it in an uninterrupted run
-        — the forced-replay invariant."""
+        — the forced-replay invariant.
+
+        ``fd``: the chunk runs the residual+norm-fused layer bodies; a
+        final chunk slices the sampling position and runs the same fused
+        final-norm + streaming-head epilogue as the decode step."""
         x = self.model._embed(params, tokens)
+        if fd:
+            x, pools = tf.paged_prefill_stack(
+                self.arch, params["blocks"], pools, x, page_row, start,
+                total, slot, moe_cap, tp_axis=self.tp_axis, fused=True)
+            if not final:
+                if self.sanitize:
+                    pos = start + jnp.arange(x.shape[1])
+                    live = jnp.isfinite(x) | (pos >= total)[None, :, None]
+                    return jnp.zeros((), jnp.int32), pools, live.all()
+                return jnp.zeros((), jnp.int32), pools
+            xl = tf.chunk_final_hidden(x, start, total)
+            toks, ok = self._fused_head(
+                params, xl, total[None], seed[None], temp[None],
+                top_k[None], top_p[None], sampled=sampled, filtered=filtered,
+                fused=fused)
+            if self.sanitize:
+                return toks[0], pools, ok[0]
+            return toks[0], pools
         x, pools = tf.paged_prefill_stack(self.arch, params["blocks"], pools,
                                           x, page_row, start, total, slot,
                                           moe_cap, tp_axis=self.tp_axis)

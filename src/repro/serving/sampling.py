@@ -31,14 +31,22 @@ at any horizon, including across a preemption landing between dispatches.
 
 Filtering order follows the common serving convention: temperature scaling,
 then top-k, then top-p (nucleus) on the rescaled distribution, then one
-categorical draw. ``temperature == 0`` short-circuits to raw ``argmax`` on
-the unscaled logits — bit-identical to the historical greedy path.
+draw. ``temperature == 0`` short-circuits to raw ``argmax`` on the unscaled
+logits — bit-identical to the historical greedy path.
 
 The top-k/top-p masking itself lives in ``repro.kernels.fused_sampling``:
 ``fused=True`` (the default) streams it sort-free (Pallas on TPU, a bit-key
 bisection in jnp elsewhere), ``fused=False`` runs the single sort-based
 reference. The two are bit-identical by construction — they share one
 decision predicate — so the flag changes speed, never tokens.
+
+The draw itself is the canonical inverse-CDF walk of
+``repro.kernels.fused_lm_head.ref``: one ``jax.random.uniform`` from the
+``fold_in(key(seed), position)`` key, then the first vocab index whose
+(canonically tiled) prefix softmax mass exceeds ``uniform * Z``. Exact
+categorical sampling, and — unlike the Gumbel-noise formulation — needing
+no per-vocab-entry randomness, so the fused decode epilogue can reproduce
+the identical token while streaming the unembed GEMM over vocab blocks.
 """
 from __future__ import annotations
 
@@ -48,6 +56,7 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.fused_lm_head import ref as head_ref
 from repro.kernels.fused_sampling import ops as fused_ops
 from repro.kernels.fused_sampling import ref as fused_ref
 
@@ -58,6 +67,16 @@ def fused_sampling_enabled() -> bool:
     filter everywhere. A debugging escape hatch — the two implementations
     draw bit-identical tokens, so the toggle only changes step latency."""
     return os.environ.get("REPRO_FUSED_SAMPLING", "1") not in ("", "0")
+
+
+def fused_decode_enabled() -> bool:
+    """Env default for the continuous engine's ``fused_decode`` flag: set
+    ``REPRO_FUSED_DECODE=0`` to serve the unfused decode path (separate
+    residual adds / norms and a materialized-logits sampler). Like the
+    sampler flag, the fused and unfused paths emit bit-identical token
+    streams by construction, so the toggle only changes memory traffic and
+    step latency."""
+    return os.environ.get("REPRO_FUSED_DECODE", "1") not in ("", "0")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,8 +152,6 @@ def sample_tokens(logits: jax.Array, seeds: jax.Array, positions: jax.Array,
         fn = fused_ops.filter_logits if fused else fused_ref.filter_logits_ref
         lg = fn(lg, top_k.astype(jnp.int32), top_p.astype(jnp.float32))
 
-    keys = jax.vmap(
-        lambda s, p: jax.random.fold_in(jax.random.key(s), p)
-    )(seeds.astype(jnp.uint32), positions.astype(jnp.int32))
-    sampled = jax.vmap(jax.random.categorical)(keys, lg).astype(jnp.int32)
+    rs = head_ref.row_uniforms(seeds, positions)
+    sampled = head_ref.draw_tokens(lg, rs)
     return jnp.where(temps > 0, sampled, greedy)

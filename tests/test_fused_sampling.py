@@ -300,8 +300,9 @@ def test_fused_and_reference_engines_serve_identical_streams(fp32_llama):
         tokens[fused] = [res[i]["tokens"] for i in range(len(reqs))]
         # the engine compiled the filter variant it was asked for, and the
         # variant key names the implementation
-        assert ("decode", True, True, fused) in engine._jit_cache
-        assert ("decode", True, True, not fused) not in engine._jit_cache
+        fd = engine.fused_decode
+        assert ("decode", True, True, fused, fd) in engine._jit_cache
+        assert ("decode", True, True, not fused, fd) not in engine._jit_cache
     assert tokens[True] == tokens[False], \
         "fused filter diverged from the sort-based reference in serving"
 

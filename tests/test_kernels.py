@@ -43,6 +43,85 @@ def test_bias_gelu_kernel(dtype, with_bias):
                                np.asarray(yr, np.float32), atol=atol)
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(8, 128), (256, 384)])
+@pytest.mark.parametrize("kind", ["rmsnorm", "layernorm"])
+def test_decode_residual_norm_kernel_bitwise(shape, dtype, kind):
+    """The decode-path residual+norm fusion is a BIT-exactness contract,
+    not a tolerance one: the kernel adds in the model dtype and duplicates
+    ``_apply_norm`` op-for-op, so jit'd kernel (interpret) and jit'd ref
+    must agree exactly — this is what lets the engine's ``fused_decode``
+    flag promise token-identical streams."""
+    y = jax.random.normal(jax.random.key(0), shape, dtype)
+    x = jax.random.normal(jax.random.key(1), shape, dtype)
+    scale = jnp.linspace(0.8, 1.2, shape[-1]).astype(jnp.float32)
+    bias = None if kind == "rmsnorm" \
+        else jnp.linspace(-0.1, 0.1, shape[-1]).astype(jnp.float32)
+    hk, xk = jax.jit(lambda y, x: ln_kernel.decode_residual_norm(
+        y, x, scale, bias, kind=kind, interpret=True))(y, x)
+    hr, xr = jax.jit(lambda y, x: ln_ref.decode_residual_norm(
+        y, x, scale, bias, kind=kind))(y, x)
+    assert jnp.array_equal(xk, xr), "fused residual add is not bit-exact"
+    assert jnp.array_equal(hk, hr), "fused norm output is not bit-exact"
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(8, 128), (64, 256)])
+def test_gated_rmsnorm_kernel_bitwise(shape, dtype):
+    """Same bit-exactness contract for the mamba epilogue's SiLU-gated
+    RMSNorm (``models.ssm`` delegates to the ref — the kernel must match
+    it exactly for the ssm families' fused decode)."""
+    y = jax.random.normal(jax.random.key(2), shape, dtype)
+    z = jax.random.normal(jax.random.key(3), shape, dtype)
+    scale = jnp.linspace(0.9, 1.1, shape[-1]).astype(jnp.float32)
+    ok = jax.jit(lambda y, z: ln_kernel.gated_rmsnorm(
+        y, z, scale, interpret=True))(y, z)
+    orf = jax.jit(lambda y, z: ln_ref.gated_rmsnorm(y, z, scale))(y, z)
+    assert jnp.array_equal(ok, orf)
+
+
+# ------------------------------------------------ fused training/prefill blocks
+
+
+@pytest.mark.parametrize("name", ["bert-large", "llama3.2-3b",
+                                  "jamba-v0.1-52b"])
+def test_fused_blocks_tolerance_parity(name):
+    """REPRO_FUSED_BLOCKS routes apply_block's residual+norm (and the gelu
+    MLP's bias+activation) through the fused kernels. Unlike fused decode
+    this is a tolerance contract — the training fusion adds in fp32 where
+    the unfused block adds in model dtype — so forward logits must agree
+    to rounding, not bitwise. bert-large covers the post-norm
+    ``fused_residual_layernorm`` sites (the paper's Fig-13 pattern) and
+    ``bias_gelu``; llama covers the pre-norm mixer-add + ln2 fusion; jamba
+    the hybrid mamba/attn periods."""
+    from repro.configs import smoke_config
+    from repro.models import build_model
+    arch = smoke_config(name)
+    model = build_model(arch)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(11)
+    batch = {"tokens": jnp.asarray(rng.integers(5, arch.vocab_size, (2, 16)))}
+
+    def fwd(flag, monkey=pytest.MonkeyPatch()):
+        monkey.setenv("REPRO_FUSED_BLOCKS", flag)
+        try:
+            logits, _ = jax.jit(model.forward)(params, batch)
+        finally:
+            monkey.undo()
+        return np.asarray(logits, np.float32)
+
+    ref, fused = fwd("0"), fwd("1")
+    np.testing.assert_allclose(fused, ref, atol=3e-2, rtol=1e-2)
+
+
+def test_fused_blocks_default_off(monkeypatch):
+    from repro.models.transformer import fused_blocks_enabled
+    monkeypatch.delenv("REPRO_FUSED_BLOCKS", raising=False)
+    assert fused_blocks_enabled() is False
+    monkeypatch.setenv("REPRO_FUSED_BLOCKS", "1")
+    assert fused_blocks_enabled() is True
+
+
 @pytest.mark.parametrize("causal", [True, False])
 @pytest.mark.parametrize("shape", [(4, 128, 128), (2, 256, 64)])
 def test_softmax_kernel(shape, causal):

@@ -320,8 +320,9 @@ def test_replay_parity_fused_vs_reference_sampler(fp32_llama):
     assert ref_forced == fused_clean, \
         "reference-sampler replay diverged from the fused engine"
     # the reference engine really traced the ref filter variant
-    assert ("decode", True, True, False) in engine._jit_cache
-    assert ("decode", True, True, True) not in engine._jit_cache
+    fd = engine.fused_decode
+    assert ("decode", True, True, False, fd) in engine._jit_cache
+    assert ("decode", True, True, True, fd) not in engine._jit_cache
 
 
 def test_replay_exact_preemption_mid_prefill(fp32_llama):

@@ -51,6 +51,17 @@ BASELINE = {
                 "speedup_vs_n1": 1.27},
         "diverged_streams": 0,
     },
+    "decode_fusion": {
+        "unfused": {"tok_s": 290.0},
+        "fused": {"tok_s": 295.0},
+        "fused_n4": {"tok_s": 340.0},
+        "speedup_vs_unfused": 1.02,
+        "diverged_streams": 0,
+        "hbm_bytes_saved_per_token": 120_000,
+        "hbm_accounting": {"logits_bytes_per_token": 100_000,
+                           "residual_bytes_per_token": 20_000,
+                           "fused_norm_sites": 7},
+    },
 }
 
 
@@ -76,6 +87,14 @@ def test_metric_inventory_matches_baseline_sections():
     assert "multistep.n16.dispatches_per_token" in paths
     assert "multistep.n4.speedup_vs_n1" in paths
     assert "multistep.diverged_streams" in paths
+    assert "decode_fusion.unfused.tok_s" in paths
+    assert "decode_fusion.fused.tok_s" in paths
+    assert "decode_fusion.fused_n4.tok_s" in paths
+    assert "decode_fusion.speedup_vs_unfused" in paths
+    assert "decode_fusion.diverged_streams" in paths
+    # the analytic HBM accounting is context (a constant of the arch), not a
+    # gated perf number
+    assert not any("hbm" in p for p in paths)
     # static engine numbers are context, not gated; the reference sampler's
     # overhead is context too (only its absolute tok/s is gated)
     assert not any("static" in p for p in paths)
@@ -150,6 +169,37 @@ def test_baseline_without_multistep_section_fails():
     missing = [r for r in rows if not r["ok"]]
     assert [r["metric"] for r in missing] == ["multistep.<section>"]
     assert "re-baseline" in missing[0]["note"]
+
+
+def test_baseline_without_decode_fusion_section_fails():
+    """`decode_fusion` became REQUIRED with the fused decode residual
+    stream: a baseline predating it would silently drop the fused-vs-unfused
+    zero-divergence gate."""
+    old = {k: v for k, v in copy.deepcopy(BASELINE).items()
+           if k != "decode_fusion"}
+    rows = cb.compare(copy.deepcopy(old), old, 0.2)
+    missing = [r for r in rows if not r["ok"]]
+    assert [r["metric"] for r in missing] == ["decode_fusion.<section>"]
+    assert "re-baseline" in missing[0]["note"]
+
+
+def test_decode_fusion_gate_directions():
+    """The fused/unfused ratio is a noise floor (tolerance applies: on CPU
+    the fused graph is op-identical so ~1.0x is healthy), but ONE
+    fused-vs-unfused token mismatch fails at any tolerance — the fusion's
+    entire contract is bit-identical streams."""
+    cur = copy.deepcopy(BASELINE)
+    cur["decode_fusion"]["speedup_vs_unfused"] = 1.02 * 0.9    # -10% < 20%
+    assert _failed(cb.compare(cur, BASELINE, 0.2)) == []
+    cur["decode_fusion"]["speedup_vs_unfused"] = 1.02 * 0.5    # a real cliff
+    assert _failed(cb.compare(cur, BASELINE, 0.2)) == \
+        ["decode_fusion.speedup_vs_unfused"]
+    cur = copy.deepcopy(BASELINE)
+    cur["decode_fusion"]["diverged_streams"] = 1
+    rows = cb.compare(cur, BASELINE, tolerance=10.0)
+    assert _failed(rows) == ["decode_fusion.diverged_streams"]
+    assert "correctness invariant" in \
+        [r for r in rows if not r["ok"]][0]["note"]
 
 
 def test_multistep_gate_directions():

@@ -33,6 +33,18 @@ metric:
 - ``multistep.diverged_streams``         (N>1 vs N=1 token mismatches: must
                                           be exactly 0 — determinism bug,
                                           not a perf number)
+- ``decode_fusion.{unfused,fused,fused_n4}.tok_s``
+                                         (decode residual-stream fusion)
+- ``decode_fusion.speedup_vs_unfused``   (fused over unfused throughput in
+                                          the SAME artifact: a noise floor —
+                                          on CPU the fused graph is
+                                          op-identical, so ~0.8-1.0x is
+                                          healthy and only a real cliff
+                                          fails)
+- ``decode_fusion.diverged_streams``     (fused vs unfused token mismatches:
+                                          must be exactly 0 — the fusion's
+                                          whole contract is bit-identical
+                                          streams)
 - ``recompiles.excess``                  (jit cache misses after warmup:
                                           must be exactly 0 — a retrace is
                                           a correctness bug, not a perf
@@ -80,7 +92,8 @@ Metric = Tuple[str, float, str]
 
 # sections the BASELINE must carry: absence means it predates the coverage
 # (and would silently un-gate it) — regenerate and commit a fresh artifact
-REQUIRED_SECTIONS = ("families", "recompiles", "sampled", "multistep")
+REQUIRED_SECTIONS = ("families", "recompiles", "sampled", "multistep",
+                     "decode_fusion")
 
 
 def iter_metrics(baseline: dict) -> Iterator[Metric]:
@@ -122,6 +135,17 @@ def iter_metrics(baseline: dict) -> Iterator[Metric]:
     if "diverged_streams" in multistep:
         yield ("multistep.diverged_streams",
                multistep["diverged_streams"], "zero")
+    fusion = baseline.get("decode_fusion", {})
+    for tag in ("unfused", "fused", "fused_n4"):
+        d = fusion.get(tag)
+        if d and "tok_s" in d:
+            yield f"decode_fusion.{tag}.tok_s", d["tok_s"], "higher"
+    if "speedup_vs_unfused" in fusion:
+        yield ("decode_fusion.speedup_vs_unfused",
+               fusion["speedup_vs_unfused"], "higher")
+    if "diverged_streams" in fusion:
+        yield ("decode_fusion.diverged_streams",
+               fusion["diverged_streams"], "zero")
     if "recompiles" in baseline:
         yield ("recompiles.excess",
                baseline["recompiles"].get("excess", 0), "zero")
